@@ -1,0 +1,62 @@
+"""Format the dry-run results (results/dryrun/*.json) into the
+§Dry-run / §Roofline tables for EXPERIMENTS.md."""
+import glob
+import json
+import os
+
+from repro.analysis.roofline import fmt_seconds
+
+
+def load(out_dir: str = "results/dryrun"):
+    cells = {}
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        d = json.load(open(p))
+        cells[(d["arch"], d["shape"], d["mesh"])] = d
+    return cells
+
+
+def table(out_dir: str = "results/dryrun", mesh: str = "single",
+          markdown: bool = False) -> str:
+    cells = load(out_dir)
+    lines = []
+    sep = " | " if markdown else "  "
+    hdr = sep.join([f"{'arch':26s}", f"{'shape':11s}", f"{'fits':4s}",
+                    f"{'GiB/dev':>7s}", f"{'compute':>9s}", f"{'memory':>9s}",
+                    f"{'collect':>9s}", f"{'dom':>7s}", f"{'useful':>6s}",
+                    f"{'RLfrac':>6s}"])
+    lines.append(("| " + hdr + " |") if markdown else hdr)
+    if markdown:
+        lines.append("|" + "|".join(["---"] * 10) + "|")
+    for (arch, shape, m), d in sorted(cells.items()):
+        if m != mesh:
+            continue
+        if not d.get("applicable"):
+            row = [f"{arch:26s}", f"{shape:11s}", "skip", "", "", "", "",
+                   "", "", ""]
+        elif "error" in d:
+            row = [f"{arch:26s}", f"{shape:11s}", "ERR", "", "", "", "",
+                   "", "", ""]
+        else:
+            r, mem = d["roofline"], d["memory"]
+            row = [f"{arch:26s}", f"{shape:11s}",
+                   "yes" if mem["fits_hbm"] else "NO",
+                   f"{mem['per_device_bytes'] / 2**30:7.1f}",
+                   f"{fmt_seconds(r['compute_s']):>9s}",
+                   f"{fmt_seconds(r['memory_s']):>9s}",
+                   f"{fmt_seconds(r['collective_s']):>9s}",
+                   f"{r['dominant'][:-2]:>7s}",
+                   f"{r['useful_flop_ratio']:6.2f}",
+                   f"{r['roofline_fraction']:6.3f}"]
+        lines.append(("| " + sep.join(row) + " |") if markdown
+                     else sep.join(row))
+    return "\n".join(lines)
+
+
+def run():
+    for mesh in ("single", "multi"):
+        print(f"\n== roofline baselines — {mesh}-pod mesh ==")
+        print(table(mesh=mesh))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Benchmark suite entry point — one section per paper table/figure:
+
+  characterization   §3 Figs 1-7 / Table 1 (workload statistics)
+  mismatch           §4 Table 2 (granularity/responsiveness/adaptability)
+  fig8_replay        §6 Fig 8 (trace replay: survival + P95 latency)
+  engine_fig8        beyond-paper: Fig 8 on the live serving engine
+  throttle_precision §6 kernel-selftest analogue (2000 ms +/- 2.3%)
+  roofline_table     dry-run roofline baselines (if results/ present)
+
+Run: PYTHONPATH=src python -m benchmarks.run
+"""
+import os
+import sys
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    from benchmarks import (characterization, engine_fig8,
+                            engine_overhead, fig8_replay, mismatch,
+                            throttle_precision)
+    characterization.run()
+    mismatch.run()
+    fig8_replay.run()
+    engine_fig8.run()
+    engine_overhead.run()
+    throttle_precision.run()
+    if os.path.isdir("results/dryrun"):
+        from benchmarks import roofline_table
+        roofline_table.run()
+    else:
+        print("\n(results/dryrun missing — run "
+              "`python -m repro.launch.dryrun --all` for roofline tables)")
+    print(f"\nbenchmarks done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

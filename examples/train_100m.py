@@ -1,0 +1,76 @@
+"""Train a ~100M-parameter llama-family model for a few hundred steps on
+CPU, with checkpoints, WSD or cosine schedule, and optional gradient
+compression — the end-to-end training driver at example scale.
+
+Run: PYTHONPATH=src python examples/train_100m.py [--steps 300]
+(~100M params is slow on CPU; --d-model 256 gives a quick demo run.)
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataIterator
+from repro.models import model as M
+from repro.models.schema import init_params
+from repro.perf import DEFAULT_PERF, replace as perf_replace
+from repro.training.optimizer import OptConfig
+from repro.training.train_step import init_train_state, make_train_step
+
+
+def build_cfg(d_model: int, n_layers: int):
+    base = get_config("llama3.2-3b")
+    return dataclasses.replace(
+        base, n_layers=n_layers, d_model=d_model, n_heads=max(d_model // 64, 2),
+        n_kv_heads=max(d_model // 128, 1), d_ff=d_model * 4, vocab=8192,
+        head_dim=64, dtype="float32", group_size=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/train100m")
+    args = ap.parse_args()
+
+    cfg = build_cfg(args.d_model, args.layers)
+    n = cfg.param_count()
+    print(f"model: {n / 1e6:.1f}M params, {cfg.n_layers}L x {cfg.d_model}")
+    params = init_params(M.param_schema(cfg), jax.random.PRNGKey(0),
+                         cfg.dtype)
+    perf = perf_replace(DEFAULT_PERF, remat="none",
+                        grad_compress=args.grad_compress)
+    opt_cfg = OptConfig(lr=6e-4, warmup_steps=args.steps // 20,
+                        total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(cfg, perf, opt_cfg),
+                      donate_argnums=(0, 1))
+    opt = init_train_state(cfg, params, perf)
+    data = DataIterator(cfg, SHAPES["train_4k"], seed=0,
+                        batch=args.batch, seq=args.seq)
+    mgr = CheckpointManager(args.ckpt_dir, keep=2, every=100)
+
+    t0 = time.time()
+    tokens = 0
+    for i in range(args.steps):
+        params, opt, m = step_fn(params, opt, data.at(i), i)
+        tokens += args.batch * args.seq
+        mgr.maybe_save(i, {"params": params, "opt": opt})
+        if i % 20 == 0 or i == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {i:4d}  loss {float(m['loss']):.4f}  "
+                  f"lr {float(m['lr']):.2e}  "
+                  f"{tokens / max(dt, 1e-9):,.0f} tok/s")
+    mgr.finalize()
+    print(f"done: final loss {float(m['loss']):.4f} "
+          f"({time.time() - t0:.0f}s); checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+from repro.configs.base import (MLAConfig, ModelConfig, MoEConfig, SHAPES,
+                                SSMConfig, ShapeConfig, XLSTMConfig,
+                                cell_applicability)
+from repro.configs.registry import ARCH_IDS, all_configs, get_config, iter_cells, reduced
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "XLSTMConfig",
+    "ShapeConfig", "SHAPES", "cell_applicability",
+    "ARCH_IDS", "get_config", "all_configs", "reduced", "iter_cells",
+]

@@ -1,0 +1,74 @@
+"""Architecture registry: ``--arch <id>`` resolution + reduced configs.
+
+``get_config(arch)`` returns the full assigned config; ``reduced(cfg)``
+shrinks it to a CPU-smoke-test size *of the same family* (same layer
+pattern, few layers/experts, tiny embeddings) per the assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.configs.base import ModelConfig, MoEConfig, SHAPES, ShapeConfig, cell_applicability
+
+_ARCH_MODULES = {
+    "jamba-v0.1-52b": "repro.configs.jamba_v0_1_52b",
+    "llama3.2-3b": "repro.configs.llama3_2_3b",
+    "phi3-medium-14b": "repro.configs.phi3_medium_14b",
+    "minicpm-2b": "repro.configs.minicpm_2b",
+    "internlm2-20b": "repro.configs.internlm2_20b",
+    "pixtral-12b": "repro.configs.pixtral_12b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick_400b_a17b",
+    "xlstm-350m": "repro.configs.xlstm_350m",
+}
+
+ARCH_IDS = list(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def reduced(cfg: ModelConfig, seed_vocab: int = 512) -> ModelConfig:
+    """Same-family miniature for CPU smoke tests: one scan group, narrow
+    width, few experts, tiny vocab."""
+    changes: dict = dict(
+        n_layers=cfg.group_size,          # one full pattern group
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads else 4,
+        d_ff=0 if cfg.d_ff == 0 else 256,
+        vocab=seed_vocab,
+        head_dim=32,
+        n_frontend_tokens=min(cfg.n_frontend_tokens, 16),
+        remat=False,
+    )
+    if cfg.moe is not None:
+        changes["moe"] = dataclasses.replace(
+            cfg.moe, n_experts=4, top_k=min(cfg.moe.top_k, 2), d_ff_expert=128)
+    if cfg.mla is not None:
+        changes["mla"] = dataclasses.replace(
+            cfg.mla, kv_lora_rank=32, q_lora_rank=64,
+            qk_nope_head_dim=32, qk_rope_head_dim=16, v_head_dim=32)
+    if cfg.ssm is not None:
+        changes["ssm"] = dataclasses.replace(cfg.ssm, d_state=8, chunk=32, n_ssm_heads=2)
+    if cfg.xlstm is not None:
+        changes["xlstm"] = dataclasses.replace(cfg.xlstm, chunk=32)
+    return dataclasses.replace(cfg, **changes)
+
+
+def iter_cells():
+    """Yield (arch, shape, applicable, reason) for all 40 assignment cells."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, reason = cell_applicability(cfg, shape)
+            yield arch, shape, ok, reason

@@ -1,0 +1,25 @@
+"""AgentCgroup core: the paper's contribution, ported to a multi-tenant
+JAX serving pod (see DESIGN.md §2 for the kernel->TPU mapping).
+
+  domains     — hierarchical resource domains (cgroup v2 analogue)
+  accounting  — PSI-style pressure + allocation-latency statistics
+  controller  — device-resident state + in-step (jitted) enforcement
+  policy      — AgentCgroup + the mismatch baselines of Table 2
+  intent      — upward hints / downward feedback protocol
+  freezer     — freeze/thaw with host-memory state offload
+  events      — enforcement event log
+"""
+from repro.core.domains import (DomainTree, Domain, ChargeResult,
+                                UNLIMITED, LOW, NORMAL, HIGH)
+from repro.core.events import Ev, Event, EventLog
+from repro.core.accounting import Accounting, LatencyStats, PSITracker
+from repro.core.intent import (Hint, AdaptiveAgentModel, Feedback,
+                               hint_to_high, make_feedback, parse_hint)
+from repro.core.freezer import FrozenStore
+
+__all__ = [
+    "DomainTree", "Domain", "ChargeResult", "UNLIMITED", "LOW", "NORMAL",
+    "HIGH", "Ev", "Event", "EventLog", "Accounting", "LatencyStats",
+    "PSITracker", "Hint", "AdaptiveAgentModel", "Feedback", "hint_to_high",
+    "make_feedback", "parse_hint", "FrozenStore",
+]

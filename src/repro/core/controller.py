@@ -1,0 +1,251 @@
+"""Device-resident domain state + in-step enforcement (the eBPF analogue).
+
+The paper's responsiveness fix is to run control logic *at the kernel
+enforcement point* (memcg_bpf_ops / sched_ext) instead of in a
+user-space daemon.  The TPU-pod analogue: enforcement decisions are
+computed *inside the jitted engine step* from device-resident domain
+state (``jax.lax`` ops only), so a burst is throttled in the same step
+it occurs — no host round trip.  The host-side daemon (serving engine /
+``policy.py``) only manages lifecycle (create/freeze/thaw/remove) via
+the shared state arrays, exactly like the paper's "lightweight
+user-space daemon managing cgroup lifecycle via shared BPF maps".
+
+State layout (fixed capacity ``n``; index 0 is the root):
+  usage/high/max/low : i32 pages          parent : i32 (-1 for root)
+  priority           : i32 (0/1/2)        frozen : bool
+  throttle_until     : i32 engine step    peak   : i32
+
+``charge_batch`` serializes grants within a step via ``lax.scan`` —
+the same serialization the memcg page-counter hierarchy applies — so
+results are deterministic and order-faithful.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import domains as D
+
+UNLIMITED = D.UNLIMITED
+DEPTH = 4          # root / tenant / session / tool-call
+
+
+@dataclass(frozen=True)
+class ControllerConfig:
+    step_ms: float = 10.0             # engine-step duration the delays quantize to
+    base_delay_ms: float = 10.0
+    max_delay_ms: float = 2000.0
+    high_priority_discount: float = 0.1
+    overage_gain: float = 10.0
+
+
+def new_state(capacity_pages: int, n_domains: int = 64) -> dict:
+    """Fresh device state with only the root (index 0) configured."""
+    n = n_domains
+    st = {
+        "usage": jnp.zeros((n,), jnp.int32),
+        "high": jnp.full((n,), UNLIMITED, jnp.int32),
+        "max": jnp.full((n,), UNLIMITED, jnp.int32),
+        "low": jnp.zeros((n,), jnp.int32),
+        "parent": jnp.full((n,), -1, jnp.int32),
+        "priority": jnp.full((n,), D.NORMAL, jnp.int32),
+        "frozen": jnp.zeros((n,), bool),
+        "active": jnp.zeros((n,), bool),
+        "throttle_until": jnp.zeros((n,), jnp.int32),
+        "peak": jnp.zeros((n,), jnp.int32),
+    }
+    st["max"] = st["max"].at[0].set(capacity_pages)
+    st["high"] = st["high"].at[0].set(capacity_pages)
+    st["active"] = st["active"].at[0].set(True)
+    return st
+
+
+def _ancestor_chain(parent, idx):
+    """(DEPTH,) ancestor indices of ``idx`` (self first), -1-padded."""
+    chain = [idx]
+    for _ in range(DEPTH - 1):
+        prev = chain[-1]
+        nxt = jnp.where(prev >= 0, parent[jnp.maximum(prev, 0)], -1)
+        chain.append(nxt)
+    return jnp.stack(chain)
+
+
+def _delay_steps(cfg: ControllerConfig, over_frac, priority, protected):
+    """get_high_delay_ms analogue, quantized to engine steps."""
+    delay_ms = jnp.minimum(cfg.max_delay_ms,
+                           cfg.base_delay_ms * (1.0 + cfg.overage_gain * over_frac))
+    delay_ms = jnp.where(priority == D.HIGH,
+                         delay_ms * cfg.high_priority_discount, delay_ms)
+    delay_ms = jnp.where(protected, 0.0, delay_ms)
+    return jnp.ceil(delay_ms / cfg.step_ms).astype(jnp.int32)
+
+
+def charge_batch(state: dict, dom: jax.Array, amt: jax.Array, step,
+                 cfg: ControllerConfig = ControllerConfig()):
+    """Hierarchically charge ``amt[i]`` pages to domain ``dom[i]``.
+
+    Returns (new_state, granted (m,) bool, stalled (m,) bool).
+    ``stalled`` marks requests denied *because of throttle/freeze* (they
+    retry next step); hard-``max`` denials also stall (the engine's
+    graceful-degradation path never OOM-kills from inside the step).
+    Zero-amount requests are gated only by freeze/throttle (a decode
+    step that does not cross a page boundary allocates nothing but must
+    still respect cgroup.freeze).
+    """
+    def one(carry, req):
+        usage, peak, throttle_until = carry
+        d, a = req
+        valid = d >= 0
+        chain = _ancestor_chain(state["parent"], jnp.maximum(d, 0))
+        cvalid = (chain >= 0) & valid
+        cidx = jnp.maximum(chain, 0)
+
+        frozen = jnp.any(jnp.where(cvalid, state["frozen"][cidx], False))
+        throttled = jnp.any(jnp.where(cvalid, throttle_until[cidx] > step, False))
+        over_max = jnp.any(jnp.where(cvalid, usage[cidx] + a > state["max"][cidx],
+                                     False))
+        grant = valid & ~frozen & ~throttled & ~over_max
+        add = jnp.where(cvalid & grant, a, 0)
+        usage = usage.at[cidx].add(add)
+        peak = jnp.maximum(peak, usage)
+
+        # soft-limit breach -> graduated throttle on the charged domain
+        new_usage = jnp.where(cvalid, usage[cidx], 0)
+        high = state["high"][cidx]
+        over = jnp.where(cvalid & (high < UNLIMITED),
+                         new_usage - high, 0)
+        protected = jnp.where(cvalid, new_usage <= state["low"][cidx], True)
+        over_frac = jnp.max(jnp.where(over > 0,
+                                      over / jnp.maximum(high, 1), 0.0))
+        any_over = grant & (over_frac > 0)
+        dly = _delay_steps(cfg, over_frac, state["priority"][jnp.maximum(d, 0)],
+                           jnp.all(protected | (over <= 0)))
+        tu = jnp.where(any_over,
+                       jnp.maximum(throttle_until[jnp.maximum(d, 0)],
+                                   step + dly),
+                       throttle_until[jnp.maximum(d, 0)])
+        throttle_until = throttle_until.at[jnp.maximum(d, 0)].set(
+            jnp.where(valid, tu, throttle_until[jnp.maximum(d, 0)]))
+        stalled = valid & (frozen | throttled | over_max)
+        return (usage, peak, throttle_until), (grant, stalled)
+
+    (usage, peak, throttle_until), (granted, stalled) = jax.lax.scan(
+        one, (state["usage"], state["peak"], state["throttle_until"]),
+        (dom.astype(jnp.int32), amt.astype(jnp.int32)))
+    new_state = dict(state, usage=usage, peak=peak,
+                     throttle_until=throttle_until)
+    return new_state, granted, stalled
+
+
+def host_charge(state: dict, idx: int, amt: int) -> dict:
+    """Unconditional hierarchical charge for host-side lifecycle moves
+    (residual transfer on tool-domain close, thaw re-charge).  Never
+    denied — the pages are already resident; this is bookkeeping."""
+    usage = np.asarray(state["usage"]).copy()
+    parent = np.asarray(state["parent"])
+    i = idx
+    for _ in range(DEPTH):
+        if i < 0:
+            break
+        usage[i] = max(0, usage[i] + amt)
+        i = int(parent[i])
+    return dict(state, usage=jnp.asarray(usage),
+                peak=jnp.maximum(state["peak"], jnp.asarray(usage)))
+
+
+def uncharge_batch(state: dict, dom: jax.Array, amt: jax.Array):
+    """Release pages (always succeeds); vectorized scatter over chains."""
+    chain = jax.vmap(lambda d: _ancestor_chain(state["parent"],
+                                               jnp.maximum(d, 0)))(dom)
+    valid = (chain >= 0) & (dom >= 0)[:, None]
+    sub = jnp.where(valid, amt[:, None], 0)
+    usage = state["usage"].at[jnp.maximum(chain, 0).reshape(-1)].add(
+        -sub.reshape(-1))
+    return dict(state, usage=jnp.maximum(usage, 0))
+
+
+def slot_gate(state: dict, slot_dom: jax.Array, step) -> jax.Array:
+    """May each slot advance this step?  (no frozen/throttled ancestor)"""
+    def one(d):
+        chain = _ancestor_chain(state["parent"], jnp.maximum(d, 0))
+        cvalid = (chain >= 0) & (d >= 0)
+        cidx = jnp.maximum(chain, 0)
+        frozen = jnp.any(jnp.where(cvalid, state["frozen"][cidx], False))
+        throttled = jnp.any(jnp.where(cvalid,
+                                      state["throttle_until"][cidx] > step,
+                                      False))
+        return (d >= 0) & ~frozen & ~throttled
+    return jax.vmap(one)(slot_dom.astype(jnp.int32))
+
+
+# -------------------------------------------------------------- host mirror
+
+
+class DeviceDomainTable:
+    """Host-side index allocator + lifecycle editor for the device state.
+
+    This is the paper's 'lightweight user-space daemon': it creates and
+    removes domains, configures limits, freezes/thaws — but the per-
+    allocation enforcement runs on device inside the jitted step.
+    """
+
+    def __init__(self, capacity_pages: int, n_domains: int = 64,
+                 cfg: ControllerConfig = ControllerConfig()):
+        self.cfg = cfg
+        self.n = n_domains
+        self.state = new_state(capacity_pages, n_domains)
+        self.index: dict[str, int] = {"/": 0}
+        self._free = list(range(1, n_domains))
+
+    def create(self, path: str, *, high: int = UNLIMITED, max: int = UNLIMITED,
+               low: int = 0, priority: int = D.NORMAL) -> int:
+        assert path not in self.index, path
+        parent_path = path.rsplit("/", 1)[0] or "/"
+        pidx = self.index[parent_path]
+        idx = self._free.pop(0)
+        self.index[path] = idx
+        st = self.state
+        self.state = dict(
+            st,
+            high=st["high"].at[idx].set(high),
+            max=st["max"].at[idx].set(max),
+            low=st["low"].at[idx].set(low),
+            parent=st["parent"].at[idx].set(pidx),
+            priority=st["priority"].at[idx].set(priority),
+            usage=st["usage"].at[idx].set(0),
+            peak=st["peak"].at[idx].set(0),
+            frozen=st["frozen"].at[idx].set(False),
+            active=st["active"].at[idx].set(True),
+            throttle_until=st["throttle_until"].at[idx].set(0),
+        )
+        return idx
+
+    def remove(self, path: str) -> None:
+        idx = self.index.pop(path)
+        residual = int(self.state["usage"][idx])
+        if residual:
+            # release residual charges up the chain (host-side lifecycle op)
+            self.state = uncharge_batch(self.state,
+                                        jnp.array([idx], jnp.int32),
+                                        jnp.array([residual], jnp.int32))
+        st = self.state
+        self.state = dict(st, active=st["active"].at[idx].set(False),
+                          frozen=st["frozen"].at[idx].set(False),
+                          parent=st["parent"].at[idx].set(-1))
+        self._free.append(idx)
+
+    def set_frozen(self, path: str, flag: bool) -> None:
+        idx = self.index[path]
+        st = self.state
+        self.state = dict(st, frozen=st["frozen"].at[idx].set(flag))
+
+    def usage(self, path: str) -> int:
+        return int(self.state["usage"][self.index[path]])
+
+    def peak(self, path: str) -> int:
+        return int(self.state["peak"][self.index[path]])

@@ -1,0 +1,62 @@
+"""Resource-control event log (the analogue of cgroup event counters +
+AgentSight-style observability).
+
+Every enforcement action — soft/hard breaches, throttles, freezes,
+OOM kills, intent feedback — is appended here with a timestamp, so
+benchmarks can reconstruct exactly what the controller did and when.
+"""
+from __future__ import annotations
+
+import collections
+import enum
+from dataclasses import dataclass, field
+from typing import Any, Iterable, Optional
+
+
+class Ev(enum.Enum):
+    CREATE = "create"
+    REMOVE = "remove"
+    CHARGE = "charge"
+    CHARGE_FAIL = "charge_fail"
+    HIGH_BREACH = "high_breach"     # soft limit crossed (memory.events high)
+    MAX_BREACH = "max_breach"       # hard limit would be crossed
+    THROTTLE = "throttle"           # allocation delayed (get_high_delay)
+    FREEZE = "freeze"               # cgroup.freeze analogue
+    THAW = "thaw"
+    OOM_KILL = "oom_kill"           # memory.oom.group analogue
+    EVICT = "evict"
+    FEEDBACK = "feedback"           # downward intent channel fired
+    ADMIT = "admit"
+    DONE = "done"
+
+
+@dataclass
+class Event:
+    t_ms: float
+    kind: Ev
+    domain: str
+    detail: dict = field(default_factory=dict)
+
+
+class EventLog:
+    def __init__(self) -> None:
+        self.events: list[Event] = []
+
+    def emit(self, t_ms: float, kind: Ev, domain: str, **detail) -> None:
+        self.events.append(Event(t_ms, kind, domain, detail))
+
+    def count(self, kind: Ev, domain_prefix: str = "") -> int:
+        return sum(1 for e in self.events
+                   if e.kind is kind and e.domain.startswith(domain_prefix))
+
+    def of(self, kind: Ev, domain_prefix: str = "") -> list[Event]:
+        return [e for e in self.events
+                if e.kind is kind and e.domain.startswith(domain_prefix)]
+
+    def counts(self) -> dict[str, int]:
+        c: collections.Counter = collections.Counter(e.kind.value
+                                                     for e in self.events)
+        return dict(c)
+
+    def clear(self) -> None:
+        self.events.clear()

@@ -1,0 +1,62 @@
+"""Freeze/thaw with state offload — the cgroup.freeze analogue.
+
+Freezing a session must *release the contended resource* (HBM pages /
+pool pages) while preserving the session's accumulated context, so
+freeze = offload state to host memory + park; thaw = restore + resume.
+This is the paper's graceful-degradation middle step between throttling
+and termination: unlike an OOM kill, the LLM context survives.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+@dataclass
+class FrozenEntry:
+    session_id: str
+    blobs: Any                   # host pytree (numpy)
+    pages: int                   # pages the session held when frozen
+    meta: dict
+    frozen_at: float
+
+
+class FrozenStore:
+    """Host-memory swap space for frozen sessions' device state."""
+
+    def __init__(self) -> None:
+        self._entries: dict[str, FrozenEntry] = {}
+        self.n_freezes = 0
+        self.n_thaws = 0
+        self.bytes_held = 0
+
+    def freeze(self, session_id: str, device_tree: Any, *, pages: int,
+               meta: Optional[dict] = None) -> None:
+        """Offload a pytree of device arrays to host memory."""
+        assert session_id not in self._entries, session_id
+        host = jax.tree.map(lambda x: np.asarray(x), device_tree)
+        nbytes = sum(x.nbytes for x in jax.tree.leaves(host))
+        self._entries[session_id] = FrozenEntry(
+            session_id, host, pages, meta or {}, time.time())
+        self.n_freezes += 1
+        self.bytes_held += nbytes
+
+    def thaw(self, session_id: str) -> FrozenEntry:
+        """Return the offloaded state (caller re-uploads / re-charges)."""
+        e = self._entries.pop(session_id)
+        self.n_thaws += 1
+        self.bytes_held -= sum(x.nbytes for x in jax.tree.leaves(e.blobs))
+        return e
+
+    def is_frozen(self, session_id: str) -> bool:
+        return session_id in self._entries
+
+    def frozen_ids(self) -> list[str]:
+        return list(self._entries)
+
+    def pages_held(self, session_id: str) -> int:
+        return self._entries[session_id].pages

@@ -1,0 +1,322 @@
+"""Resource-control policies for the trace-replay harness.
+
+One class per row of the paper's Table 2, plus AgentCgroup itself:
+
+  * ``NoIsolationPolicy``   — the Fig-8 baseline: one shared pool, kernel
+    OOM-kills the largest consumer when allocations stall too long.
+  * ``StaticLimitPolicy``   — memory.max per container: peak-sized limits
+    waste >90 % of reservation; average-sized limits OOM on bursts
+    (granularity mismatch).
+  * ``ReactivePSIPolicy``   — systemd-oomd/Meta-oomd analogue: a daemon
+    polls PSI and kills, but poll + reaction latency lands *after* the
+    1-2 s bursts (responsiveness mismatch).
+  * ``PredictiveP95Policy`` — Autopilot/VPA analogue: limits from
+    historical P95s, defeated by 1.8x-20x non-determinism (adaptability
+    mismatch).
+  * ``AgentCgroupPolicy``   — the paper's system: hierarchical tool-call
+    domains + intent hints (upward), graduated in-kernel enforcement
+    throttle -> freeze -> feedback-retry (downward), kill only as last
+    resort.
+
+Policies operate on a ``DomainTree`` owned by the simulator; the
+simulator provides the allocation-latency physics (reclaim costs) and
+calls back on tool-span boundaries and ticks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core import domains as D
+from repro.core.events import Ev
+from repro.core.intent import (AdaptiveAgentModel, CATEGORY_HINT, Feedback,
+                               hint_to_high, make_feedback)
+
+
+@dataclass
+class AllocOutcome:
+    granted: bool
+    delay_ms: float = 0.0
+    kill: bool = False
+    freeze: bool = False
+    feedback: Optional[Feedback] = None
+    protected: bool = False     # below-``low`` fast path (skips direct reclaim)
+
+
+class BasePolicy:
+    name = "base"
+    hierarchical = False
+
+    def setup(self, sim, tasks) -> None:
+        for t in tasks:
+            sim.tree.create(self.domain_for(t), priority=t.priority)
+
+    def domain_for(self, task) -> str:
+        return f"/{task.key}"
+
+    def on_tool_start(self, sim, task, call) -> None:
+        pass
+
+    def on_tool_end(self, sim, task, call) -> None:
+        pass
+
+    def charge_path(self, sim, task) -> str:
+        return self.domain_for(task)
+
+    def on_alloc(self, sim, task, mb: int) -> AllocOutcome:
+        raise NotImplementedError
+
+    def on_release(self, sim, task, mb: int) -> None:
+        sim.tree.uncharge(self.charge_path(sim, task), mb)
+
+    def tick(self, sim) -> None:
+        pass
+
+    def on_task_end(self, sim, task) -> None:
+        path = self.domain_for(task)
+        d = sim.tree.get(path)
+        if d.usage:
+            sim.tree.uncharge(path, d.usage)
+
+    # admission control: how many tasks fit concurrently (for the
+    # mismatch benchmark's concurrency-density comparison)
+    def max_concurrency(self, capacity_mb: int, per_task_mb: float) -> int:
+        return max(1, int(capacity_mb // max(per_task_mb, 1)))
+
+
+# --------------------------------------------------------------- baselines
+
+
+class NoIsolationPolicy(BasePolicy):
+    """Shared pool, no domains below root; kernel global OOM heuristic."""
+    name = "no_isolation"
+
+    def __init__(self, oom_after_ms: float = 120.0):
+        self.oom_after_ms = oom_after_ms
+
+    def on_alloc(self, sim, task, mb: int) -> AllocOutcome:
+        res = sim.tree.try_charge(self.charge_path(sim, task), mb)
+        if res.ok:
+            return AllocOutcome(True)
+        # pool exhausted: stall; the kernel OOMs the largest consumer
+        # once the stall exceeds its patience
+        if sim.stall_ms(task) > self.oom_after_ms:
+            victim = max(sim.running_tasks(),
+                         key=lambda t: sim.tree.get(self.domain_for(t)).usage)
+            sim.kill_task(victim, reason="global_oom")
+            return AllocOutcome(False)
+        return AllocOutcome(False)
+
+
+class StaticLimitPolicy(BasePolicy):
+    """memory.max per container (K8s Guaranteed-style)."""
+    name = "static_limit"
+
+    def __init__(self, limit_mb: int):
+        self.limit_mb = limit_mb
+
+    def setup(self, sim, tasks) -> None:
+        for t in tasks:
+            sim.tree.create(self.domain_for(t), max=self.limit_mb,
+                            priority=t.priority)
+
+    def on_alloc(self, sim, task, mb: int) -> AllocOutcome:
+        res = sim.tree.try_charge(self.charge_path(sim, task), mb)
+        if res.ok:
+            return AllocOutcome(True)
+        if res.blocked_by == self.domain_for(task):
+            # the container's own memory.max: immediate OOM kill
+            sim.kill_task(task, reason="memory.max")
+            return AllocOutcome(False, kill=True)
+        return AllocOutcome(False)
+
+    def max_concurrency(self, capacity_mb: int, per_task_mb: float) -> int:
+        return max(1, int(capacity_mb // self.limit_mb))
+
+
+class ReactivePSIPolicy(BasePolicy):
+    """PSI-watching user-space OOM daemon (oomd / systemd-oomd)."""
+    name = "reactive_psi"
+
+    def __init__(self, poll_ms: float = 100.0, react_ms: float = 40.0,
+                 pressure_threshold: float = 0.4):
+        self.poll_ms = poll_ms
+        self.react_ms = react_ms
+        self.threshold = pressure_threshold
+        self._last_poll = 0.0
+        self._pending_kill_at: Optional[float] = None
+
+    def on_alloc(self, sim, task, mb: int) -> AllocOutcome:
+        res = sim.tree.try_charge(self.charge_path(sim, task), mb)
+        return AllocOutcome(res.ok)
+
+    def tick(self, sim) -> None:
+        now = sim.now_ms
+        if self._pending_kill_at is not None and now >= self._pending_kill_at:
+            self._pending_kill_at = None
+            lows = [t for t in sim.running_tasks() if t.priority == D.LOW]
+            if lows:
+                victim = max(lows,
+                             key=lambda t: sim.tree.get(self.domain_for(t)).usage)
+                sim.kill_task(victim, reason="oomd_psi")
+        if now - self._last_poll < self.poll_ms:
+            return
+        self._last_poll = now
+        if sim.accounting.pressure("root", now) > self.threshold:
+            # daemon wakes, decides, writes cgroup.kill — react_ms later
+            if self._pending_kill_at is None:
+                self._pending_kill_at = now + self.react_ms
+
+
+class PredictiveP95Policy(StaticLimitPolicy):
+    """Autopilot-style: per-task limit = P95 of historical peaks."""
+    name = "predictive_p95"
+
+    def __init__(self, history_peaks_mb: dict, safety: float = 1.1,
+                 default_mb: int = 600):
+        self.history = history_peaks_mb
+        self.safety = safety
+        self.default_mb = default_mb
+        self.limit_mb = default_mb       # updated per task at setup
+
+    def setup(self, sim, tasks) -> None:
+        self.limits = {}
+        for t in tasks:
+            hist = self.history.get(t.trace.task_id)
+            lim = (int(np.percentile(hist, 95) * self.safety)
+                   if hist else self.default_mb)
+            self.limits[t.key] = lim
+            sim.tree.create(self.domain_for(t), max=lim, priority=t.priority)
+
+    def on_alloc(self, sim, task, mb: int) -> AllocOutcome:
+        res = sim.tree.try_charge(self.charge_path(sim, task), mb)
+        if res.ok:
+            return AllocOutcome(True)
+        if res.blocked_by == self.domain_for(task):
+            sim.kill_task(task, reason="predicted_limit")
+            return AllocOutcome(False, kill=True)
+        return AllocOutcome(False)
+
+
+# ------------------------------------------------------------- AgentCgroup
+
+
+class AgentCgroupPolicy(BasePolicy):
+    """The paper's system (§5): hierarchical tool-call domains, intent
+    hints, graduated throttle -> freeze -> feedback, kill last."""
+    name = "agentcgroup"
+    hierarchical = True
+
+    def __init__(self, *, session_high: Optional[dict] = None,
+                 use_intent: bool = True,
+                 base_delay_ms: float = 10.0, max_delay_ms: float = 2000.0,
+                 freeze_threshold: float = 0.97, thaw_threshold: float = 0.80,
+                 hard_patience_ms: float = 150.0,
+                 agent_model: Optional[AdaptiveAgentModel] = None):
+        self.session_high = session_high or {}
+        self.use_intent = use_intent
+        self.base_delay_ms = base_delay_ms
+        self.max_delay_ms = max_delay_ms
+        self.freeze_threshold = freeze_threshold
+        self.thaw_threshold = thaw_threshold
+        self.hard_patience_ms = hard_patience_ms
+        self.agent_model = agent_model or AdaptiveAgentModel()
+        self._tool_domain: dict[str, str] = {}
+        self._tool_seq = 0
+
+    def setup(self, sim, tasks) -> None:
+        for t in tasks:
+            # session_high keyed by task_id (paper: LOW sessions get
+            # memory.high = 400 MB, HIGH gets memory.high = max)
+            high = self.session_high.get(t.trace.task_id, D.UNLIMITED)
+            low = 0
+            if t.priority == D.HIGH:
+                # below_low protection for the latency-sensitive session
+                low = int(t.trace.peak_mb * 1.05)
+            sim.tree.create(self.domain_for(t), high=high, low=low,
+                            priority=t.priority)
+
+    # --- fine-grained domains at tool-call boundaries (bash-wrapper analogue)
+
+    def on_tool_start(self, sim, task, call) -> None:
+        self._tool_seq += 1
+        path = f"{self.domain_for(task)}/tool_{self._tool_seq}"
+        hint = None
+        if self.use_intent:
+            declared = CATEGORY_HINT.get(call.category)
+            hint = self.agent_model.hint_for(call.category, declared)
+        high = hint_to_high(hint)
+        sim.tree.create(path, high=high, priority=task.priority)
+        self._tool_domain[task.key] = path
+
+    def on_tool_end(self, sim, task, call) -> None:
+        path = self._tool_domain.pop(task.key, None)
+        if path and sim.tree.exists(path):
+            d = sim.tree.get(path)
+            # per-tool-call metrics (memory.peak) feed the event log
+            sim.tree.log.emit(sim.now_ms, Ev.DONE, path, peak=d.peak)
+            # retained memory moves up to the session (retry accumulation)
+            residual = d.usage
+            sim.tree.remove(path)          # uncharges residual from chain
+            if residual:
+                sim.tree.try_charge(self.domain_for(task), residual)
+
+    def charge_path(self, sim, task) -> str:
+        return self._tool_domain.get(task.key, self.domain_for(task))
+
+    def on_release(self, sim, task, mb: int) -> None:
+        path = self.charge_path(sim, task)
+        d = sim.tree.get(path)
+        take = min(mb, d.usage)
+        if take:
+            sim.tree.uncharge(path, take)
+        rest = mb - take
+        if rest > 0 and path != self.domain_for(task):
+            sim.tree.uncharge(self.domain_for(task), rest)
+
+    # --- graduated in-kernel enforcement
+
+    def on_alloc(self, sim, task, mb: int) -> AllocOutcome:
+        path = self.charge_path(sim, task)
+        res = sim.tree.try_charge(path, mb)
+        if res.ok:
+            delay = 0.0
+            if res.over_high:
+                delay = sim.tree.throttle_delay_ms(
+                    path, base_delay_ms=self.base_delay_ms,
+                    max_delay_ms=self.max_delay_ms)
+            # below_low protection: the HIGH session's allocations skip
+            # direct reclaim — sibling throttling did the work already
+            sess = sim.tree.get(self.domain_for(task))
+            protected = (task.priority == D.HIGH and sess.usage <= sess.low)
+            return AllocOutcome(True, delay_ms=delay, protected=protected)
+        # hard denial: stall; after patience, feedback-retry (strategy
+        # reconstruction) instead of killing
+        if sim.stall_ms(task) > self.hard_patience_ms:
+            d = sim.tree.get(path)
+            fb = make_feedback(path, "oom", d.peak, d.max)
+            sim.tree.log.emit(sim.now_ms, Ev.FEEDBACK, path, reason="oom")
+            return AllocOutcome(False, feedback=fb)
+        return AllocOutcome(False)
+
+    # --- daemon: freeze under extreme pressure, thaw when it clears
+
+    def tick(self, sim) -> None:
+        tree = sim.tree
+        usage, cap = tree.root.usage, tree.root.max
+        frozen = sim.frozen_tasks()
+        if usage > self.freeze_threshold * cap:
+            cands = [t for t in sim.running_tasks() if t.priority == D.LOW]
+            if cands:
+                victim = max(cands,
+                             key=lambda t: tree.get(self.domain_for(t)).usage)
+                sim.freeze_task(victim)
+        elif frozen:
+            # thaw only when the re-charge will not immediately push the
+            # pool back over the freeze threshold (hysteresis)
+            cand = min(frozen, key=lambda t: t.frozen_mb)
+            if usage + cand.frozen_mb < self.thaw_threshold * cap:
+                sim.thaw_task(cand)

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the compute hot-spots (flash attention,
+flash/paged decode, chunked SSD scan) + ops.py backend dispatch and
+ref.py pure-jnp oracles.  Kernels target TPU (BlockSpec VMEM tiling,
+MXU-aligned dots) and are validated in interpret mode on CPU."""

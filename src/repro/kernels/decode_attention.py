@@ -1,0 +1,193 @@
+"""Single-token decode attention kernels (flash-decoding on TPU).
+
+Two variants:
+  * ``decode_attention_pallas``        — dense per-slot cache
+    (B, S_max, Hkv, d), split-K over the sequence: grid's last axis
+    walks S blocks sequentially, partial (max, sum, acc) live in VMEM
+    scratch, blocks past the sequence length issue no work.
+  * ``paged_decode_attention_pallas``  — vLLM-style paged cache.  The
+    page table is a *scalar-prefetch* operand
+    (``pltpu.PrefetchScalarGridSpec``): the k/v index_map dereferences
+    ``page_table[b, j]`` so each grid step DMAs exactly one KV page
+    from HBM into VMEM — the TPU analogue of paged attention's
+    gather, with no host round trip.
+
+Both are GQA-aware: q is viewed as (B, Hkv, G, dk) and each grid step
+attends one kv head's G query heads at once (G x bk MXU dots).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------ dense cache
+
+
+def _dense_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, scale, bs, ns):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b]
+
+    @pl.when(j * bs < length)
+    def _compute():
+        qb = q_ref[0, 0].astype(jnp.float32) * scale            # (G, dk)
+        kb = k_ref[0, :, 0, :].astype(jnp.float32)              # (bs, dk)
+        vb = v_ref[0, :, 0, :].astype(jnp.float32)              # (bs, dv)
+        s = jax.lax.dot_general(qb, kb, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, bs)
+        pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p.astype(vb.dtype), vb, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == ns - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k_cache, v_cache, lengths, *,
+                            scale: Optional[float] = None,
+                            block_s: int = 512, interpret: bool = False):
+    """q: (B,H,dk)  caches: (B,S_max,Hkv,d)  lengths: (B,) -> (B,H,dv)."""
+    B, H, dk = q.shape
+    Smax, hkv, dv = k_cache.shape[1], k_cache.shape[2], v_cache.shape[-1]
+    g = H // hkv
+    scale = scale or dk ** -0.5
+    bs = min(block_s, Smax)
+    assert Smax % bs == 0
+    ns = Smax // bs
+    qg = q.reshape(B, hkv, g, dk)
+
+    kern = functools.partial(_dense_kernel, scale=scale, bs=bs, ns=ns)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, hkv, ns),
+            in_specs=[
+                pl.BlockSpec((1, 1, g, dk), lambda b, h, j, lens: (b, h, 0, 0)),
+                pl.BlockSpec((1, bs, 1, dk), lambda b, h, j, lens: (b, j, h, 0)),
+                pl.BlockSpec((1, bs, 1, dv), lambda b, h, j, lens: (b, j, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, dv),
+                                   lambda b, h, j, lens: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, dv), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, hkv, g, dv), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="flash_decode",
+    )(lengths.astype(jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(B, H, dv)
+
+
+# ------------------------------------------------------------ paged cache
+
+
+def _paged_kernel(len_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, scale, page, npp):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b]
+
+    @pl.when(j * page < length)
+    def _compute():
+        qb = q_ref[0, 0].astype(jnp.float32) * scale            # (G, dk)
+        kb = k_ref[0, :, 0, :].astype(jnp.float32)              # (page, dk)
+        vb = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(qb, kb, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        pos = j * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p.astype(vb.dtype), vb, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == npp - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(q, k_pages, v_pages, page_table, lengths, *,
+                                  scale: Optional[float] = None,
+                                  interpret: bool = False):
+    """q: (B,H,dk)  pages: (n_pages, page, Hkv, d)  page_table: (B, npp)."""
+    B, H, dk = q.shape
+    page, hkv, dv = k_pages.shape[1], k_pages.shape[2], v_pages.shape[-1]
+    npp = page_table.shape[1]
+    g = H // hkv
+    scale = scale or dk ** -0.5
+    qg = q.reshape(B, hkv, g, dk)
+
+    kern = functools.partial(_paged_kernel, scale=scale, page=page, npp=npp)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,       # lengths, page_table
+            grid=(B, hkv, npp),
+            in_specs=[
+                pl.BlockSpec((1, 1, g, dk),
+                             lambda b, h, j, lens, tbl: (b, h, 0, 0)),
+                # the page table drives which KV page is DMA'd each step
+                pl.BlockSpec((1, page, 1, dk),
+                             lambda b, h, j, lens, tbl: (tbl[b, j], 0, h, 0)),
+                pl.BlockSpec((1, page, 1, dv),
+                             lambda b, h, j, lens, tbl: (tbl[b, j], 0, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, dv),
+                                   lambda b, h, j, lens, tbl: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, dv), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, hkv, g, dv), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="paged_flash_decode",
+    )(lengths.astype(jnp.int32), page_table.astype(jnp.int32),
+      qg, k_pages, v_pages)
+    return out.reshape(B, H, dv)

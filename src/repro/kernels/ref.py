@@ -1,0 +1,494 @@
+"""Pure-jnp oracles and CPU production paths for every kernel.
+
+Three tiers per op:
+  * ``*_naive``      — smallest obviously-correct oracle (tests only).
+  * ``*_blockwise``  — memory-sane pure-JAX production path (CPU / dry-run;
+                       what the Pallas kernel is validated against at scale).
+  * Pallas kernel    — in sibling modules, TPU target, interpret-validated.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+# ======================================================================
+# Attention
+# ======================================================================
+
+
+def _expand_kv(q, k):
+    """Group-query: reshape q to (B, S, Hkv, G, d)."""
+    hq, hkv = q.shape[2], k.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    return q.reshape(q.shape[0], q.shape[1], hkv, g, q.shape[3]), g
+
+
+def attention_naive(q, k, v, *, causal: bool = True, scale: Optional[float] = None):
+    """O(S^2)-memory oracle. q:(B,S,H,dk) k:(B,S,Hkv,dk) v:(B,S,Hkv,dv)."""
+    scale = scale or q.shape[-1] ** -0.5
+    qg, g = _expand_kv(q, k)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k.shape[1] - q.shape[1])
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bske->bqkge", p, v.astype(jnp.float32))
+    return o.reshape(q.shape[0], q.shape[1], q.shape[2], v.shape[-1]).astype(q.dtype)
+
+
+def flash_attention_blockwise(q, k, v, *, causal: bool = True,
+                              scale: Optional[float] = None,
+                              block_q: int = 1024, block_k: int = 1024):
+    """Streaming (flash) attention in pure JAX, with a custom VJP.
+
+    Forward: static python loop over q blocks; inner ``fori_loop`` over
+    kv blocks with a *static causal bound* per q block (true block
+    skipping — the causal flop saving is real, not masked-out).
+    Backward (``_flash_bwd``): blockwise recompute from (q, k, v, lse) —
+    residual memory is O(B*S*H*d), NOT O(S^2) and NOT the inner-loop
+    carries autodiff-of-the-forward would save (which OOM'd train cells
+    at 4k x 256 batch).  Mirrors the two-pass FlashAttention backward the
+    TPU kernel implements.
+    """
+    out, _ = _flash_fwd_vjp(q, k, v, causal, scale, block_q, block_k)
+    return out
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_fwd_vjp(q, k, v, causal, scale, block_q, block_k):
+    return _flash_fwd(q, k, v, causal=causal, scale=scale,
+                      block_q=block_q, block_k=block_k)
+
+
+def _flash_fwd_rule(q, k, v, causal, scale, block_q, block_k):
+    out, lse = _flash_fwd(q, k, v, causal=causal, scale=scale,
+                          block_q=block_q, block_k=block_k)
+    return (out, lse), (q, k, v, out, lse)
+
+
+def _flash_bwd_rule(causal, scale, block_q, block_k, res, cts):
+    dout, _ = cts
+    q, k, v, out, lse = res
+    dq, dk, dv = _flash_bwd(q, k, v, out, lse, dout, causal=causal,
+                            scale=scale, block_q=block_q, block_k=block_k)
+    return dq, dk, dv
+
+
+_flash_fwd_vjp.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def _flash_fwd(q, k, v, *, causal, scale, block_q, block_k):
+    """Returns (out (B,S,H,dv), lse (B,Hkv,G,S) fp32)."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    scale = scale or dk ** -0.5
+    bq, bk = min(block_q, S), min(block_k, k.shape[1])
+    Sk = k.shape[1]
+    nq, nk = S // bq, Sk // bk
+    assert S % bq == 0 and Sk % bk == 0, (S, bq, Sk, bk)
+    qg, g = _expand_kv(q, k)
+    hkv = k.shape[2]
+
+    def q_block(iq: int):
+        qb = jax.lax.slice_in_dim(qg, iq * bq, (iq + 1) * bq, axis=1)
+        qb = qb.astype(jnp.float32) * scale  # (B,bq,Hkv,G,dk)
+
+        def kv_step(ik, carry):
+            acc, m, l = carry
+            kb = jax.lax.dynamic_slice_in_dim(k, ik * bk, bk, axis=1).astype(jnp.float32)
+            vb = jax.lax.dynamic_slice_in_dim(v, ik * bk, bk, axis=1).astype(jnp.float32)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb)  # (B,Hkv,G,bq,bk)
+            if causal:
+                qpos = iq * bq + jnp.arange(bq)
+                kpos = ik * bk + jnp.arange(bk)
+                s = jnp.where(qpos[:, None] >= kpos[None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum("bkgqs,bske->bkgqe", p, vb)
+            return acc, m_new, l
+
+        acc0 = jnp.zeros((B, hkv, g, bq, dv), jnp.float32)
+        m0 = jnp.full((B, hkv, g, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, hkv, g, bq), jnp.float32)
+        # causal: kv blocks beyond this q block's diagonal are skipped
+        # entirely; the bound is STATIC so the loop lowers to a scan.
+        hi = min(nk, (((iq + 1) * bq + bk - 1) // bk)) if causal else nk
+        acc, m, l = jax.lax.fori_loop(0, hi, kv_step, (acc0, m0, l0),
+                                      unroll=False)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))            # (B,Hkv,G,bq)
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, bq, H, dv), lse
+
+    outs, lses = zip(*[q_block(i) for i in range(nq)])
+    out = jnp.concatenate(outs, axis=1).astype(q.dtype)
+    lse = jnp.concatenate(lses, axis=-1)                    # (B,Hkv,G,S)
+    return out, lse
+
+
+def _flash_bwd(q, k, v, out, lse, dout, *, causal, scale, block_q, block_k):
+    """Two-pass blockwise FlashAttention backward (recompute p from lse)."""
+    B, S, H, dkd = q.shape
+    dvd = v.shape[-1]
+    scale = scale or dkd ** -0.5
+    bq, bk = min(block_q, S), min(block_k, k.shape[1])
+    Sk = k.shape[1]
+    nq, nk = S // bq, Sk // bk
+    qg, g = _expand_kv(q, k)
+    hkv = k.shape[2]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # D_i = rowsum(dO * O): (B,S,H) -> (B,Hkv,G,S)
+    Drow = jnp.einsum("bshe,bshe->bsh", dout.astype(jnp.float32),
+                      out.astype(jnp.float32))
+    Drow = Drow.reshape(B, S, hkv, g).transpose(0, 2, 3, 1)
+    dog = dout.reshape(B, S, hkv, g, dvd).astype(jnp.float32)
+
+    def qslice(t, i, b):
+        return jax.lax.slice_in_dim(t, i * b, (i + 1) * b, axis=1)
+
+    # ---- pass 1: dq per q block (inner loop over kv blocks)
+    def dq_block(iq: int):
+        qb = qslice(qg, iq, bq).astype(jnp.float32)          # (B,bq,Hkv,G,dk)
+        dob = qslice(dog, iq, bq)                            # (B,bq,Hkv,G,dv)
+        lseb = jax.lax.slice_in_dim(lse, iq * bq, (iq + 1) * bq, axis=3)
+        Db = jax.lax.slice_in_dim(Drow, iq * bq, (iq + 1) * bq, axis=3)
+
+        def kv_step(ik, dqa):
+            kb = jax.lax.dynamic_slice_in_dim(kf, ik * bk, bk, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(vf, ik * bk, bk, axis=1)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb * scale, kb)
+            if causal:
+                qpos = iq * bq + jnp.arange(bq)
+                kpos = ik * bk + jnp.arange(bk)
+                s = jnp.where(qpos[:, None] >= kpos[None, :], s, NEG_INF)
+            p = jnp.exp(s - lseb[..., None])                 # (B,Hkv,G,bq,bk)
+            dp = jnp.einsum("bqkge,bske->bkgqs", dob, vb)
+            ds = p * (dp - Db[..., None]) * scale
+            return dqa + jnp.einsum("bkgqs,bskd->bqkgd", ds, kb)
+
+        hi = min(nk, (((iq + 1) * bq + bk - 1) // bk)) if causal else nk
+        dq0 = jnp.zeros((B, bq, hkv, g, dkd), jnp.float32)
+        dqb = jax.lax.fori_loop(0, hi, kv_step, dq0, unroll=False)
+        return dqb.reshape(B, bq, H, dkd)
+
+    dq = jnp.concatenate([dq_block(i) for i in range(nq)], axis=1)
+
+    # ---- pass 2: dk/dv per kv block (inner loop over q blocks)
+    def dkv_block(ik: int):
+        kb = jax.lax.slice_in_dim(kf, ik * bk, (ik + 1) * bk, axis=1)
+        vb = jax.lax.slice_in_dim(vf, ik * bk, (ik + 1) * bk, axis=1)
+
+        def q_step(iq, carry):
+            dka, dva = carry
+            qb = jax.lax.dynamic_slice_in_dim(qg, iq * bq, bq, axis=1)
+            qb = qb.astype(jnp.float32)
+            dob = jax.lax.dynamic_slice_in_dim(dog, iq * bq, bq, axis=1)
+            lseb = jax.lax.dynamic_slice_in_dim(lse, iq * bq, bq, axis=3)
+            Db = jax.lax.dynamic_slice_in_dim(Drow, iq * bq, bq, axis=3)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb * scale, kb)
+            if causal:
+                qpos = iq * bq + jnp.arange(bq)
+                kpos = ik * bk + jnp.arange(bk)
+                s = jnp.where(qpos[:, None] >= kpos[None, :], s, NEG_INF)
+            p = jnp.exp(s - lseb[..., None])
+            dva = dva + jnp.einsum("bkgqs,bqkge->bske", p, dob)
+            dp = jnp.einsum("bqkge,bske->bkgqs", dob, vb)
+            ds = p * (dp - Db[..., None]) * scale
+            dka = dka + jnp.einsum("bkgqs,bqkgd->bskd", ds, qb)
+            return dka, dva
+
+        lo = (ik * bk) // bq if causal else 0
+        dk0 = jnp.zeros((B, bk, hkv, dkd), jnp.float32)
+        dv0 = jnp.zeros((B, bk, hkv, dvd), jnp.float32)
+        dkb, dvb = jax.lax.fori_loop(lo, nq, q_step, (dk0, dv0),
+                                     unroll=False)
+        return dkb, dvb
+
+    dks, dvs = zip(*[dkv_block(j) for j in range(nk)])
+    dk = jnp.concatenate(dks, axis=1).astype(k.dtype)
+    dv = jnp.concatenate(dvs, axis=1).astype(v.dtype)
+    return dq.astype(q.dtype), dk, dv
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths, *,
+                         scale: Optional[float] = None,
+                         block_s: int = 2048):
+    """Single-token decode vs a contiguous cache, flash-decoding style.
+
+    q:(B,H,dk) k_cache:(B,Smax,Hkv,dk) v_cache:(B,Smax,Hkv,dv) lengths:(B,)
+    Attends to positions < lengths[b].  The sequence is processed in
+    blocks with a running (max, sum, acc) — the same split-K structure
+    the Pallas decode kernel uses — so scores never materialize as a
+    full (B, H, S_max) tensor in HBM.
+    """
+    B, Smax, hkv, dk = k_cache.shape
+    scale = scale or dk ** -0.5
+    H = q.shape[1]
+    g = H // hkv
+    dv = v_cache.shape[-1]
+    bs = min(block_s, Smax)
+    assert Smax % bs == 0, (Smax, bs)
+    ns = Smax // bs
+    qg = q.reshape(B, hkv, g, dk).astype(jnp.float32) * scale
+
+    def step(i, carry):
+        acc, m, l = carry
+        kb = jax.lax.dynamic_slice_in_dim(k_cache, i * bs, bs, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v_cache, i * bs, bs, axis=1)
+        # cache slices stay in their storage dtype; the dot accumulates
+        # fp32 (an .astype here would hoist an f32 copy of the cache)
+        s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(k_cache.dtype), kb,
+                       preferred_element_type=jnp.float32)
+        pos = i * bs + jnp.arange(bs)
+        s = jnp.where((pos[None] < lengths[:, None])[:, None, None], s,
+                      NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgs,bske->bkge", p.astype(v_cache.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return acc, m_new, l
+
+    acc0 = jnp.zeros((B, hkv, g, dv), jnp.float32)
+    m0 = jnp.full((B, hkv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, hkv, g), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, ns, step, (acc0, m0, l0))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.reshape(B, H, dv).astype(q.dtype)
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, page_table, lengths, *,
+                               scale: Optional[float] = None):
+    """Paged decode oracle: gathers each sequence's pages then delegates.
+
+    q:(B,H,dk); k_pages/v_pages:(n_pages, page, Hkv, d); page_table:(B, pages_per_seq)
+    """
+    B = q.shape[0]
+    pp = page_table.shape[1]
+    page = k_pages.shape[1]
+    kc = k_pages[page_table].reshape(B, pp * page, *k_pages.shape[2:])
+    vc = v_pages[page_table].reshape(B, pp * page, *v_pages.shape[2:])
+    return decode_attention_ref(q, kc, vc, lengths, scale=scale)
+
+
+# ======================================================================
+# Mamba (SSD / Mamba-2 chunked scan)
+# ======================================================================
+
+
+def ssd_sequential(x, dt, A, B, C, D, *, h0=None):
+    """Sequential SSD oracle (lax.scan over time).
+
+    x:(b,s,nh,dh) dt:(b,s,nh) A:(nh,) B,C:(b,s,N) D:(nh,)
+    Returns y:(b,s,nh,dh), h_final:(b,nh,dh,N).
+    h_t = exp(dt*A) h + dt * (x_t outer B_t);  y_t = h_t C_t + D x_t
+    """
+    b, s, nh, dh = x.shape
+    N = B.shape[-1]
+    xf, dtf, Bf, Cf = (t.astype(jnp.float32) for t in (x, dt, B, C))
+    Af = A.astype(jnp.float32)
+    h = jnp.zeros((b, nh, dh, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp            # (b,nh,dh) (b,nh) (b,N) (b,N)
+        decay = jnp.exp(dtt * Af[None])  # (b,nh)
+        h = h * decay[..., None, None] + (dtt[..., None, None]
+                                          * xt[..., None] * Bt[:, None, None, :])
+        y = jnp.einsum("bhdn,bn->bhd", h, Ct)
+        return h, y
+
+    inps = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+            Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2))
+    h, ys = jax.lax.scan(step, h, inps)
+    y = ys.transpose(1, 0, 2, 3) + D.astype(jnp.float32)[None, None, :, None] * xf
+    return y.astype(x.dtype), h
+
+
+def ssd_chunked(x, dt, A, B, C, D, *, chunk: int = 256, h0=None):
+    """Chunked SSD: sequential ``lax.scan`` over chunks carrying the
+    (nh, dh, N) state — the exact structure of the Pallas kernel, so the
+    intra-chunk decay matrix exists for ONE chunk at a time ((b,c,c,nh)
+    instead of (b,nc,c,c,nh), which materialized ~33 GiB/device on the
+    jamba train cell).  Matches ``ssd_sequential`` to fp32 tolerance.
+    """
+    b, s, nh, dh = x.shape
+    N = B.shape[-1]
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+    nc = s // c
+    xf = x.astype(jnp.float32).reshape(b, nc, c, nh, dh)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, c, nh)
+    Bf = B.astype(jnp.float32).reshape(b, nc, c, N)
+    Cf = C.astype(jnp.float32).reshape(b, nc, c, N)
+    Af = A.astype(jnp.float32)
+    causal = jnp.tril(jnp.ones((c, c), bool))
+
+    def chunk_step(h, inp):
+        xz, dtz, Bz, Cz = inp                          # (b,c,...)
+        seg = jnp.cumsum(dtz, axis=1)                  # (b,c,nh)
+        tot = seg[:, -1:]                              # (b,1,nh)
+        dec_to_end = jnp.exp((tot - seg) * Af)
+        dec_from_start = jnp.exp(seg * Af)             # includes own dt
+        # cross-chunk: y_i += dec(start->i) * C_i . h
+        y_cross = jnp.einsum("bcn,bch,bhdn->bchd", Cz, dec_from_start, h)
+        # intra-chunk causal part
+        rel = seg[:, :, None, :] - seg[:, None, :, :]  # (b,i,j,nh)
+        decm = jnp.where(causal[None, :, :, None], jnp.exp(rel * Af), 0.0)
+        cb = jnp.einsum("bin,bjn->bij", Cz, Bz)
+        m = cb[..., None] * decm * dtz[:, None]        # (b,i,j,nh)
+        y = jnp.einsum("bijh,bjhd->bihd", m, xz) + y_cross
+        # state update to chunk end
+        w = dtz * dec_to_end                           # (b,c,nh)
+        states = jnp.einsum("bch,bchd,bcn->bhdn", w, xz, Bz)
+        h = h * jnp.exp(tot[:, 0] * Af)[..., None, None] + states
+        return h, y
+
+    h_init = (jnp.zeros((b, nh, dh, N), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    cm = lambda t: t.transpose(1, 0, *range(2, t.ndim))  # chunk-major
+    h_final, ys = jax.lax.scan(chunk_step, h_init,
+                               (cm(xf), cm(dtf), cm(Bf), cm(Cf)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, nh, dh)
+    y = y + D.astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_decode_step(h, x, dt, A, B, C, D):
+    """One-token SSD update. h:(b,nh,dh,N) x:(b,nh,dh) dt:(b,nh) B,C:(b,N)."""
+    hf = h.astype(jnp.float32)
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * A.astype(jnp.float32)[None])
+    h_new = hf * decay[..., None, None] + (dtf[..., None, None]
+                                           * xf[..., None] * B.astype(jnp.float32)[:, None, None, :])
+    y = jnp.einsum("bhdn,bn->bhd", h_new, C.astype(jnp.float32))
+    y = y + D.astype(jnp.float32)[None, :, None] * xf
+    return y.astype(x.dtype), h_new
+
+
+# ======================================================================
+# mLSTM (xLSTM matrix-memory) — stabilized chunked linear attention
+# ======================================================================
+
+
+def mlstm_sequential(q, k, v, i_gate, f_gate, *, state=None):
+    """Sequential mLSTM oracle (xLSTM eqs. 19-27, log-space stabilized).
+
+    q,k,v:(b,s,nh,dh) gates:(b,s,nh) pre-activation.
+    Returns y:(b,s,nh,dh) and final (C:(b,nh,dh,dh), n:(b,nh,dh), m:(b,nh)).
+    """
+    b, s, nh, dh = q.shape
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    kf = kf / (dh ** 0.5)
+    i_f = i_gate.astype(jnp.float32)
+    f_f = f_gate.astype(jnp.float32)
+    if state is None:
+        C0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, nh, dh), jnp.float32)
+        m0 = jnp.full((b, nh), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = (t.astype(jnp.float32) for t in state)
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, it, ft = inp
+        logf = jax.nn.log_sigmoid(ft)                       # (b,nh)
+        m_new = jnp.maximum(logf + m, it)
+        fd = jnp.exp(logf + m - m_new)
+        idc = jnp.exp(it - m_new)
+        C = fd[..., None, None] * C + idc[..., None, None] * (vt[..., None] * kt[..., None, :])
+        n = fd[..., None] * n + idc[..., None] * kt
+        num = jnp.einsum("bhvk,bhk->bhv", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)), jnp.exp(-m_new))
+        return (C, n, m_new), num / den[..., None]
+
+    inps = tuple(t.transpose(1, 0, 2, 3) for t in (qf, kf, vf)) + (
+        i_f.transpose(1, 0, 2), f_f.transpose(1, 0, 2))
+    (C, n, m), ys = jax.lax.scan(step, (C0, n0, m0), inps)
+    return ys.transpose(1, 0, 2, 3).astype(q.dtype), (C, n, m)
+
+
+def mlstm_chunked(q, k, v, i_gate, f_gate, *, chunk: int = 256, state=None):
+    """Chunk-parallel mLSTM matching ``mlstm_sequential``.
+
+    Intra-chunk: attention-like with log-decay matrix; inter-chunk: carried
+    state applied with prefix decays.  Chunks are processed with a scan
+    whose body is dense matmuls (flop-dominant part is intra-chunk).
+    """
+    b, s, nh, dh = q.shape
+    c = min(chunk, s)
+    assert s % c == 0
+    nc = s // c
+    rs = lambda t: t.astype(jnp.float32).reshape(b, nc, c, *t.shape[2:])
+    qf, kf, vf = rs(q), rs(k) / (dh ** 0.5), rs(v)
+    i_f, f_f = rs(i_gate), rs(f_gate)
+    logf = jax.nn.log_sigmoid(f_f)                          # (b,nc,c,nh)
+    lcum = jnp.cumsum(logf, axis=2)                         # inclusive
+    ltot = lcum[:, :, -1]                                   # (b,nc,nh)
+
+    if state is None:
+        C0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, nh, dh), jnp.float32)
+        m0 = jnp.full((b, nh), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = (t.astype(jnp.float32) for t in state)
+
+    def chunk_step(carry, inp):
+        C, n, m = carry
+        qz, kz, vz, iz, lcz, ltz = inp                      # per-chunk slices
+        # log weights: state decay to pos t: lcz_t + m ; input j to t: lcz_t - lcz_j + i_j
+        a_state = lcz + m[:, None]                          # (b,c,nh)
+        a_in = lcz[:, :, None] - lcz[:, None] + iz[:, None]  # (b,t,j,nh)
+        causal = jnp.tril(jnp.ones((c, c), bool))
+        a_in = jnp.where(causal[None, :, :, None], a_in, -jnp.inf)
+        m_t = jnp.maximum(a_in.max(axis=2), a_state)        # (b,t,nh) running stabilizer
+        w_state = jnp.exp(a_state - m_t)                    # (b,t,nh)
+        w_in = jnp.exp(a_in - m_t[:, :, None])              # (b,t,j,nh)
+        # numerator / denominator
+        qk = jnp.einsum("bthd,bjhd->btjh", qz, kz)
+        num = jnp.einsum("btjh,btjh,bjhd->bthd", qk, w_in, vz)
+        num = num + w_state[..., None] * jnp.einsum("bhvk,bthk->bthv", C, qz)
+        den_in = jnp.einsum("btjh,btjh->bth", qk, w_in)
+        den = den_in + w_state * jnp.einsum("bhk,bthk->bth", n, qz)
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # ---- state update to end of chunk
+        m_new = jnp.maximum(ltz + m, (ltz[:, None] - lcz + iz).max(axis=1))
+        w_old = jnp.exp(ltz + m - m_new)                    # (b,nh)
+        w_tok = jnp.exp(ltz[:, None] - lcz + iz - m_new[:, None])  # (b,c,nh)
+        C = w_old[..., None, None] * C + jnp.einsum("bjh,bjhv,bjhk->bhvk", w_tok, vz, kz)
+        n = w_old[..., None] * n + jnp.einsum("bjh,bjhk->bhk", w_tok, kz)
+        return (C, n, m_new), y
+
+    inps = tuple(t.transpose(1, 0, 2, 3, 4) for t in (qf, kf, vf)) + (
+        i_f.transpose(1, 0, 2, 3), lcum.transpose(1, 0, 2, 3), ltot.transpose(1, 0, 2))
+    (C, n, m), ys = jax.lax.scan(chunk_step, (C0, n0, m0), inps)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, nh, dh)
+    return y.astype(q.dtype), (C, n, m)
+
+
+def mlstm_decode_step(state, q, k, v, i_gate, f_gate):
+    """One-token mLSTM update. state=(C,n,m); q,k,v:(b,nh,dh); gates:(b,nh)."""
+    C, n, m = (t.astype(jnp.float32) for t in state)
+    dh = q.shape[-1]
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    kf = kf / (dh ** 0.5)
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))
+    it = i_gate.astype(jnp.float32)
+    m_new = jnp.maximum(logf + m, it)
+    fd, idc = jnp.exp(logf + m - m_new), jnp.exp(it - m_new)
+    C = fd[..., None, None] * C + idc[..., None, None] * (vf[..., None] * kf[..., None, :])
+    n = fd[..., None] * n + idc[..., None] * kf
+    num = jnp.einsum("bhvk,bhk->bhv", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)), jnp.exp(-m_new))
+    return (num / den[..., None]).astype(q.dtype), (C, n, m_new)

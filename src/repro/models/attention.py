@@ -1,0 +1,264 @@
+"""Attention mixers: GQA (all dense archs) and MLA (DeepSeek-V2).
+
+Two entry points per variant:
+  * ``*_forward``  — full-sequence (train / prefill), flash attention.
+  * ``*_decode``   — one new token against a per-slot cache (serve path).
+
+Decode caches are dense per-slot tensors ``(B, S_max, ...)`` whose
+sequence axis is shardable (flash-decoding style): the score/softmax
+reductions over a sharded S lower to the same partial-max/partial-sum
+collectives a split-K decode kernel performs on real hardware.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, rope_table
+from repro.models.schema import Leaf
+from repro.kernels import ops
+from repro.perf import PerfConfig, DEFAULT_PERF
+from repro.sharding_ctx import constrain, current_rules
+
+
+def _sp_attention_layout(q, k, v, S: int, perf: PerfConfig):
+    """Sequence-parallel attention layout.
+
+    With the residual stream sequence-sharded (act_seq rules), slicing q
+    into python-level blocks would fight GSPMD (per-block resharding
+    permutes).  Instead: q STAYS sequence-sharded (the shards are the q
+    blocks), k/v are gathered once per layer, and the kv-block loop runs
+    over the replicated k/v.  Costs one all-gather of k/v per layer and
+    the causal block-skip on scores (masking only); saves the per-block
+    reshard storm."""
+    rules = current_rules()
+    if rules and rules.get("act_seq"):
+        k = constrain(k, ("act_batch", None))
+        v = constrain(v, ("act_batch", None))
+        return q, k, v, max(perf.block_q, S)
+    return q, k, v, perf.block_q
+
+# ====================================================================== GQA
+
+
+def gqa_schema(cfg: ModelConfig) -> dict:
+    """Projections stored FLATTENED (d, H*hd): head counts (24/36/40...)
+    need not divide the 16-way tp axis — H*hd always does."""
+    d, hd = cfg.d_model, cfg.head_dim_
+    return {
+        "wq": Leaf((d, cfg.n_heads * hd), spec=("fsdp", "tp")),
+        "wk": Leaf((d, cfg.n_kv_heads * hd), spec=("fsdp", "tp")),
+        "wv": Leaf((d, cfg.n_kv_heads * hd), spec=("fsdp", "tp")),
+        "wo": Leaf((cfg.n_heads * hd, d), spec=("tp", "fsdp"), init="small"),
+    }
+
+
+def _heads(t, hd):
+    return t.reshape(*t.shape[:-1], t.shape[-1] // hd, hd)
+
+
+def gqa_forward(cfg: ModelConfig, p, x, cos, sin, *, causal: bool = True,
+                perf: PerfConfig = DEFAULT_PERF):
+    """x: (B, S, d) -> (B, S, d)."""
+    hd = cfg.head_dim_
+    q = _heads(jnp.einsum("bsd,df->bsf", x, p["wq"]), hd)
+    k = _heads(jnp.einsum("bsd,df->bsf", x, p["wk"]), hd)
+    v = _heads(jnp.einsum("bsd,df->bsf", x, p["wv"]), hd)
+    if cfg.rope_theta:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    q, k, v, bq = _sp_attention_layout(q, k, v, x.shape[1], perf)
+    o = ops.flash_attention(q, k, v, causal=causal, impl=perf.attn_impl,
+                            block_q=bq, block_k=perf.block_k)
+    return jnp.einsum("bsf,fd->bsd", o.reshape(*x.shape[:2], -1), p["wo"])
+
+
+def gqa_cache_schema(cfg: ModelConfig, batch: int, s_max: int) -> dict:
+    hd = cfg.head_dim_
+    spec = ("act_batch", "cache_seq")
+    return {
+        "k": Leaf((batch, s_max, cfg.n_kv_heads, hd), spec=spec, init="zeros"),
+        "v": Leaf((batch, s_max, cfg.n_kv_heads, hd), spec=spec, init="zeros"),
+    }
+
+
+def gqa_decode(cfg: ModelConfig, p, x, cache, lengths, *,
+               perf: PerfConfig = DEFAULT_PERF):
+    """x: (B, 1, d); cache {k,v}: (B, S_max, Hkv, hd); lengths: (B,) tokens
+    already cached.  Returns (out (B,1,d), new_cache)."""
+    B = x.shape[0]
+    hd = cfg.head_dim_
+    q = _heads(jnp.einsum("bsd,df->bsf", x, p["wq"]), hd)   # (B,1,H,hd)
+    k = _heads(jnp.einsum("bsd,df->bsf", x, p["wk"]), hd)
+    v = _heads(jnp.einsum("bsd,df->bsf", x, p["wv"]), hd)
+    if cfg.rope_theta:
+        cos, sin = rope_table(1, cfg.head_dim_, cfg.rope_theta,
+                              positions=lengths[:, None])
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    bidx = jnp.arange(B)
+    kc = cache["k"].at[bidx, lengths].set(k[:, 0].astype(cache["k"].dtype))
+    vc = cache["v"].at[bidx, lengths].set(v[:, 0].astype(cache["v"].dtype))
+    o = ops.decode_attention(q[:, 0], kc, vc, lengths + 1)
+    out = jnp.einsum("bf,fd->bd", o.reshape(B, -1), p["wo"])[:, None]
+    return out, {"k": kc, "v": vc}
+
+
+# ====================================================================== MLA
+
+
+def mla_schema(cfg: ModelConfig) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "w_dq": Leaf((d, m.q_lora_rank), spec=("fsdp", None)),
+        "q_norm": Leaf((m.q_lora_rank,), init="ones"),
+        "w_uq": Leaf((m.q_lora_rank, H, qk), spec=(None, "tp")),
+        "w_dkv": Leaf((d, m.kv_lora_rank + m.qk_rope_head_dim), spec=("fsdp", None)),
+        "kv_norm": Leaf((m.kv_lora_rank,), init="ones"),
+        "w_uk": Leaf((m.kv_lora_rank, H, m.qk_nope_head_dim), spec=(None, "tp")),
+        "w_uv": Leaf((m.kv_lora_rank, H, m.v_head_dim), spec=(None, "tp")),
+        "wo": Leaf((H, m.v_head_dim, d), spec=("tp", None, "fsdp"), init="small"),
+    }
+
+
+def _rms(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _mla_q(cfg, p, x, cos, sin):
+    """Shared q path: returns (q_nope (B,S,H,nd), q_rope (B,S,H,rd))."""
+    m = cfg.mla
+    ql = _rms(jnp.einsum("bsd,dq->bsq", x, p["w_dq"]), p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsq,qhk->bshk", ql, p["w_uq"])
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], cos, sin)
+    return q_nope, q_rope
+
+
+def mla_forward(cfg: ModelConfig, p, x, cos, sin, *, causal: bool = True,
+                perf: PerfConfig = DEFAULT_PERF):
+    """Prefill/train MLA: latent expanded to per-head K/V, flash attention."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    q_nope, q_rope = _mla_q(cfg, p, x, cos, sin)
+    dkv = jnp.einsum("bsd,dl->bsl", x, p["w_dkv"])
+    ckv = _rms(dkv[..., :m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(dkv[..., None, m.kv_lora_rank:], cos, sin)  # (B,S,1,rd)
+    k_nope = jnp.einsum("bsl,lhk->bshk", ckv, p["w_uk"])
+    v = jnp.einsum("bsl,lhv->bshv", ckv, p["w_uv"])
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, cfg.n_heads, m.qk_rope_head_dim))],
+        axis=-1)
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q, k, v, bq = _sp_attention_layout(q, k, v, S, perf)
+    o = ops.flash_attention(q, k, v, causal=causal, scale=qk_dim ** -0.5,
+                            impl=perf.attn_impl,
+                            block_q=bq, block_k=perf.block_k)
+    return jnp.einsum("bshv,hvd->bsd", o, p["wo"])
+
+
+def mla_cache_schema(cfg: ModelConfig, batch: int, s_max: int) -> dict:
+    m = cfg.mla
+    spec = ("act_batch", "cache_seq")
+    return {
+        "ckv": Leaf((batch, s_max, m.kv_lora_rank), spec=spec, init="zeros"),
+        "krope": Leaf((batch, s_max, m.qk_rope_head_dim), spec=spec, init="zeros"),
+    }
+
+
+def mla_decode(cfg: ModelConfig, p, x, cache, lengths, *,
+               perf: PerfConfig = DEFAULT_PERF):
+    """Absorbed-matrices MLA decode against the latent cache.
+
+    The KV cache stores only (kv_lora + rope) floats per token — ~9x
+    smaller than GQA at kv=128 — and W_UK/W_UV are *absorbed* into the
+    query/output transforms so the latent is attended to directly.
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    cos, sin = rope_table(1, m.qk_rope_head_dim, cfg.rope_theta,
+                          positions=lengths[:, None])
+    q_nope, q_rope = _mla_q(cfg, p, x, cos, sin)          # (B,1,H,*)
+    dkv = jnp.einsum("bsd,dl->bsl", x, p["w_dkv"])
+    ckv_new = _rms(dkv[..., :m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    krope_new = apply_rope(dkv[..., None, m.kv_lora_rank:], cos, sin)[:, :, 0]
+
+    bidx = jnp.arange(B)
+    ckv = cache["ckv"].at[bidx, lengths].set(ckv_new[:, 0].astype(cache["ckv"].dtype))
+    krope = cache["krope"].at[bidx, lengths].set(
+        krope_new[:, 0].astype(cache["krope"].dtype))
+
+    # absorb W_UK into q:  q_abs (B,H,l); attend the latent cache in
+    # sequence blocks (flash-decoding) so scores never hit HBM whole.
+    # NOTE: params are never .astype()'d here — XLA hoists such converts
+    # out of the layer scan into stacked f32 copies of the weights/cache.
+    q_abs = jnp.einsum("bhk,lhk->bhl", q_nope[:, 0], p["w_uk"])
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    qf = (q_abs * scale).astype(ckv.dtype)
+    qr = (q_rope[:, 0] * scale).astype(krope.dtype)
+    Smax = ckv.shape[1]
+    H = cfg.n_heads
+    bs = min(2048, Smax)
+    ns = Smax // bs
+
+    def step(i, carry):
+        acc, mx, l = carry
+        cb = jax.lax.dynamic_slice_in_dim(ckv, i * bs, bs, axis=1)
+        rb = jax.lax.dynamic_slice_in_dim(krope, i * bs, bs, axis=1)
+        # keep cache slices in bf16 and let the MXU accumulate in fp32:
+        # an .astype on the slice gets hoisted by XLA into an f32 copy of
+        # the WHOLE cache (3.75 GiB on the deepseek decode cell)
+        s = (jnp.einsum("bhl,bsl->bhs", qf, cb,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bhr,bsr->bhs", qr, rb,
+                          preferred_element_type=jnp.float32))
+        pos = i * bs + jnp.arange(bs)
+        s = jnp.where((pos[None] < (lengths + 1)[:, None])[:, None], s, -1e30)
+        m_new = jnp.maximum(mx, s.max(-1))
+        alpha = jnp.exp(mx - m_new)
+        pr = jnp.exp(s - m_new[..., None])
+        l = l * alpha + pr.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhs,bsl->bhl", pr.astype(ckv.dtype), cb,
+            preferred_element_type=jnp.float32)
+        return acc, m_new, l
+
+    acc0 = jnp.zeros((B, H, m.kv_lora_rank), jnp.float32)
+    m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H), jnp.float32)
+    acc, mx, l = jax.lax.fori_loop(0, ns, step, (acc0, m0, l0))
+    o_lat = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(x.dtype)
+    o = jnp.einsum("bhl,lhv->bhv", o_lat, p["w_uv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    out = jnp.einsum("bhv,hvd->bd", o, p["wo"])[:, None]
+    return out, {"ckv": ckv, "krope": krope}
+
+
+# ================================================================ dispatch
+
+
+def attn_schema(cfg: ModelConfig) -> dict:
+    return mla_schema(cfg) if cfg.mla is not None else gqa_schema(cfg)
+
+
+def attn_forward(cfg, p, x, cos, sin, *, causal=True, perf=DEFAULT_PERF):
+    fn = mla_forward if cfg.mla is not None else gqa_forward
+    return fn(cfg, p, x, cos, sin, causal=causal, perf=perf)
+
+
+def attn_cache_schema(cfg, batch, s_max):
+    fn = mla_cache_schema if cfg.mla is not None else gqa_cache_schema
+    return fn(cfg, batch, s_max)
+
+
+def attn_decode(cfg, p, x, cache, lengths, *, perf=DEFAULT_PERF):
+    fn = mla_decode if cfg.mla is not None else gqa_decode
+    return fn(cfg, p, x, cache, lengths, perf=perf)

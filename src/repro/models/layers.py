@@ -1,0 +1,124 @@
+"""Shared layers: RMSNorm, RoPE, SwiGLU MLP, embeddings, LM head.
+
+All parameter specs use *logical* axes (tp / fsdp — see models/schema.py);
+the launcher resolves them to mesh axes per mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.schema import Leaf
+
+# ---------------------------------------------------------------- RMSNorm
+
+
+def rmsnorm_schema(d: int) -> dict:
+    return {"scale": Leaf((d,), init="ones")}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+
+
+def rope_table(seq_len: int, head_dim: int, theta: float, positions=None):
+    """(S, hd/2) cos/sin tables in fp32.  positions overrides arange."""
+    if positions is None:
+        positions = jnp.arange(seq_len, dtype=jnp.float32)
+    else:
+        positions = positions.astype(jnp.float32)
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None] * freqs  # (..., S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., S, H, hd); cos/sin: (S, hd/2) or (B, S, hd/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, half) -> broadcast over batch and heads
+        c = cos[None, :, None, :]
+        s = sin[None, :, None, :]
+    else:  # (B, S, half)
+        c = cos[:, :, None, :]
+        s = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- MLP
+
+
+def mlp_schema(d: int, f: int) -> dict:
+    return {
+        "w_gate": Leaf((d, f), spec=("fsdp", "tp")),
+        "w_up": Leaf((d, f), spec=("fsdp", "tp")),
+        "w_down": Leaf((f, d), spec=("tp", "fsdp"), init="small"),
+    }
+
+
+def mlp(p, x):
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+# ---------------------------------------------------------------- Embedding / head
+
+
+def embedding_schema(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    # the table is d-sharded (vocab replicated): a token gather from a
+    # vocab-sharded table makes GSPMD replicate the gathered activations
+    # ("involuntary full rematerialization"); the tied LM head re-shards
+    # the (small) table to vocab-parallel instead — see lm_head.
+    sch = {"tok": Leaf((cfg.padded_vocab, d), spec=(None, "tp"))}
+    if cfg.frontend == "vision":
+        sch["patch_proj"] = Leaf((d, d), spec=("fsdp", "tp"))
+    if cfg.frontend == "audio":
+        sch["frame_proj"] = Leaf((d, d), spec=("fsdp", "tp"))
+        sch["mask_emb"] = Leaf((d,), init="normal")
+    if not cfg.tie_embeddings:
+        sch["head"] = Leaf((d, cfg.padded_vocab), spec=("fsdp", "tp"))
+    return sch
+
+
+def embed_tokens(cfg: ModelConfig, p, tokens):
+    return p["tok"].at[tokens].get(mode="clip")  # wait-free clip gather
+
+
+def lm_head(cfg: ModelConfig, p, x):
+    from repro.sharding_ctx import constrain
+    if cfg.tie_embeddings:
+        # re-shard the (small) table to vocab-parallel for the head: a
+        # one-off all-to-all on ~MBs of weights instead of partial-sum
+        # all-reduces on GBs of logits
+        w = constrain(p["tok"].T, (None, "tp"))
+    else:
+        w = p["head"]
+    return jnp.einsum("bsd,dv->bsv", x, w).astype(jnp.float32)
+
+
+def cross_entropy(logits, labels, weights):
+    """Mean CE over weighted positions. logits fp32 (B,S,V).
+
+    The gold logit is extracted with a one-hot mask (not
+    ``take_along_axis``): a gather over the vocab axis would force GSPMD
+    to replicate vocab-sharded logits."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = (logz - gold) * weights
+    denom = jnp.maximum(weights.sum(), 1.0)
+    # small z-loss for stability (MaxText-style)
+    zloss = 1e-4 * (logz * weights) ** 2
+    return (nll.sum() + zloss.sum()) / denom

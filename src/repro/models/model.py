@@ -1,0 +1,269 @@
+"""Model assembly: embedding -> scanned layer groups -> norm -> head.
+
+One assembly serves all 10 assigned architectures.  Layers are grouped
+into ``cfg.n_groups`` identical groups of ``cfg.group_size`` layers
+(parameters stacked on a leading axis, ``jax.lax.scan`` over groups);
+within a group the (attention | mamba | mlstm | slstm) x (dense | moe |
+none) pattern may be heterogeneous (jamba: 7 mamba + 1 attention, MoE
+every other layer).
+
+Three entry points:
+  * ``forward``      — full-sequence logits (train / prefill cells).
+  * ``loss_fn``      — CE (or masked-prediction CE for encoder-only).
+  * ``decode_step``  — one token against per-layer caches/states (serve).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import attention, moe as moe_mod, ssm, xlstm
+from repro.models.layers import (cross_entropy, embed_tokens, embedding_schema,
+                                 lm_head, mlp, mlp_schema, rmsnorm,
+                                 rmsnorm_schema, rope_table)
+from repro.models.schema import Leaf, stack_leaf, tree_map_schema
+from repro.perf import PerfConfig, DEFAULT_PERF
+from repro.sharding_ctx import constrain
+
+# ------------------------------------------------------------- schemas
+
+_MIXER_SCHEMA = {
+    "attn": attention.attn_schema,
+    "mamba": ssm.mamba_schema,
+    "mlstm": xlstm.mlstm_schema,
+    "slstm": xlstm.slstm_schema,
+}
+
+_MIXER_STATE_SCHEMA = {
+    "attn": lambda cfg, b, s_max: attention.attn_cache_schema(cfg, b, s_max),
+    "mamba": lambda cfg, b, s_max: ssm.mamba_state_schema(cfg, b),
+    "mlstm": lambda cfg, b, s_max: xlstm.mlstm_state_schema(cfg, b),
+    "slstm": lambda cfg, b, s_max: xlstm.slstm_state_schema(cfg, b),
+}
+
+
+def group_schema(cfg: ModelConfig) -> list:
+    """Per-position schemas for one layer group (not yet stacked)."""
+    out = []
+    for kind, ffn in zip(cfg.layer_kinds(), cfg.ffn_kinds()):
+        ent = {"ln1": rmsnorm_schema(cfg.d_model),
+               "mixer": _MIXER_SCHEMA[kind](cfg)}
+        if ffn == "dense":
+            ent["ln2"] = rmsnorm_schema(cfg.d_model)
+            ent["ffn"] = mlp_schema(cfg.d_model, cfg.d_ff)
+        elif ffn == "moe":
+            ent["ln2"] = rmsnorm_schema(cfg.d_model)
+            ent["ffn"] = moe_mod.moe_schema(cfg)
+        out.append(ent)
+    return out
+
+
+def param_schema(cfg: ModelConfig) -> dict:
+    stacked = tree_map_schema(lambda l: stack_leaf(l, cfg.n_groups),
+                              group_schema(cfg))
+    return {"embed": embedding_schema(cfg),
+            "groups": stacked,
+            "out_norm": rmsnorm_schema(cfg.d_model)}
+
+
+def decode_state_schema(cfg: ModelConfig, batch: int, s_max: int) -> list:
+    """Stacked (n_groups, ...) per-position mixer states for decode."""
+    states = []
+    for kind in cfg.layer_kinds():
+        sch = _MIXER_STATE_SCHEMA[kind](cfg, batch, s_max)
+        states.append(tree_map_schema(lambda l: stack_leaf(l, cfg.n_groups), sch))
+    return states
+
+
+# -------------------------------------------------------------- forward
+
+
+def _apply_ffn(cfg, ffn_kind, p, x, perf):
+    if ffn_kind == "none":
+        return x, jnp.zeros((), jnp.float32)
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if ffn_kind == "dense":
+        return x + mlp(p["ffn"], h), jnp.zeros((), jnp.float32)
+    y, aux = moe_mod.moe_forward(cfg, p["ffn"], h, perf=perf)
+    return x + y, aux
+
+
+def _apply_mixer(cfg, kind, p, x, cos, sin, causal, perf):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind == "attn":
+        y = attention.attn_forward(cfg, p["mixer"], h, cos, sin,
+                                   causal=causal, perf=perf)
+    elif kind == "mamba":
+        y = ssm.mamba_forward(cfg, p["mixer"], h, perf=perf)
+    elif kind == "mlstm":
+        y = xlstm.mlstm_forward(cfg, p["mixer"], h, perf=perf)
+    elif kind == "slstm":
+        y = xlstm.slstm_forward(cfg, p["mixer"], h, perf=perf)
+    else:
+        raise ValueError(kind)
+    return x + y
+
+
+def _embed(cfg: ModelConfig, params, batch):
+    """Token / frontend embedding fusion -> (B, S, d) activations."""
+    p = params["embed"]
+    if cfg.frontend == "audio":
+        # encoder-only audio: precomputed frame embeddings + mask
+        x = jnp.einsum("bsd,de->bse", batch["frames"], p["frame_proj"])
+        if "mask" in batch:
+            m = batch["mask"][..., None]
+            x = jnp.where(m, p["mask_emb"][None, None].astype(x.dtype), x)
+        return x.astype(cfg.dtype)
+    x = embed_tokens(cfg, p, batch["tokens"])
+    if cfg.frontend == "vision" and "patches" in batch:
+        pe = jnp.einsum("bnd,de->bne", batch["patches"], p["patch_proj"])
+        n = pe.shape[1]
+        x = jnp.concatenate([pe.astype(x.dtype), x[:, n:]], axis=1)
+    return x
+
+
+def _remat_wrap(fn, perf: PerfConfig):
+    if perf.remat == "none":
+        return fn
+    if perf.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def forward(cfg: ModelConfig, params, batch, *,
+            perf: PerfConfig = DEFAULT_PERF, causal: Optional[bool] = None):
+    """Full-sequence forward -> (logits (B,S,V) fp32, aux_loss scalar)."""
+    causal = (not cfg.encoder_only) if causal is None else causal
+    x = _embed(cfg, params, batch)
+    x = constrain(x, ("act_batch", "act_seq"))
+    S = x.shape[1]
+    cos, sin = (rope_table(S, _rope_dim(cfg), cfg.rope_theta)
+                if cfg.rope_theta else (None, None))
+    kinds, ffns = cfg.layer_kinds(), cfg.ffn_kinds()
+
+    def group_body(carry, gparams):
+        h = carry
+        aux = jnp.zeros((), jnp.float32)
+        for i, (kind, ffn) in enumerate(zip(kinds, ffns)):
+            h = _apply_mixer(cfg, kind, gparams[i], h, cos, sin, causal, perf)
+            h, a = _apply_ffn(cfg, ffn, gparams[i], h, perf)
+            # sequence-parallel residual stream: the carry (and anything
+            # remat saves) lives sequence-sharded between layers
+            h = constrain(h, ("act_batch", "act_seq"))
+            aux = aux + a
+        return h, aux
+
+    body = _remat_wrap(group_body, perf)
+    x, auxs = jax.lax.scan(body, x, params["groups"])
+    x = rmsnorm(params["out_norm"], x, cfg.norm_eps)
+    logits = lm_head(cfg, params["embed"], x)
+    logits = constrain(logits, ("act_batch", None, "tp"))
+    return logits, auxs.sum()
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *,
+            perf: PerfConfig = DEFAULT_PERF):
+    """Scalar loss + metrics.  batch: tokens/frames, labels, weights."""
+    logits, aux = forward(cfg, params, batch, perf=perf)
+    weights = batch["weights"].astype(jnp.float32)
+    ce = cross_entropy(logits, batch["labels"], weights)
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux, "loss": loss}
+
+
+# ---------------------------------------------------------------- decode
+
+
+def _rope_dim(cfg: ModelConfig) -> int:
+    return (cfg.mla.qk_rope_head_dim if cfg.mla is not None else cfg.head_dim_)
+
+
+def _mixer_decode(cfg, kind, p, x, state, lengths, perf):
+    h = x  # pre-norm applied by caller
+    if kind == "attn":
+        return attention.attn_decode(cfg, p["mixer"], h, state, lengths,
+                                     perf=perf)
+    if kind == "mamba":
+        return ssm.mamba_decode(cfg, p["mixer"], h, state, perf=perf)
+    if kind == "mlstm":
+        return xlstm.mlstm_decode(cfg, p["mixer"], h, state, perf=perf)
+    if kind == "slstm":
+        return xlstm.slstm_decode(cfg, p["mixer"], h, state, perf=perf)
+    raise ValueError(kind)
+
+
+def decode_step(cfg: ModelConfig, params, state, tokens, lengths, *,
+                perf: PerfConfig = DEFAULT_PERF):
+    """One decode step.
+
+    tokens: (B,) int32 current input token per slot.
+    lengths: (B,) int32 tokens already in cache (i.e. this token's position).
+    Returns (logits (B, V) fp32, new_state).
+    """
+    if cfg.encoder_only:
+        raise ValueError(f"{cfg.name} is encoder-only; no decode step")
+    x = embed_tokens(cfg, params["embed"], tokens[:, None])
+    x = constrain(x, ("act_batch",))
+    kinds, ffns = cfg.layer_kinds(), cfg.ffn_kinds()
+
+    def group_body(carry, inp):
+        h = carry
+        gparams, gstate = inp
+        new_states = []
+        for i, (kind, ffn) in enumerate(zip(kinds, ffns)):
+            hn = rmsnorm(gparams[i]["ln1"], h, cfg.norm_eps)
+            y, st = _mixer_decode(cfg, kind, gparams[i], hn, gstate[i],
+                                  lengths, perf)
+            h = h + y
+            h, _ = _apply_ffn(cfg, ffn, gparams[i], h, perf)
+            new_states.append(st)
+        return h, new_states
+
+    x, new_state = jax.lax.scan(group_body, x, (params["groups"], state))
+    x = rmsnorm(params["out_norm"], x, cfg.norm_eps)
+    logits = lm_head(cfg, params["embed"], x)[:, 0]
+    return logits, new_state
+
+
+def serve_step(cfg: ModelConfig, params, state, tokens, lengths, *,
+               perf: PerfConfig = DEFAULT_PERF):
+    """Closed serving step: decode + greedy next-token (dry-run target)."""
+    logits, new_state = decode_step(cfg, params, state, tokens, lengths,
+                                    perf=perf)
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return nxt, new_state
+
+
+# ------------------------------------------------------------ input specs
+
+
+def batch_spec_leaves(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Logical-axis Leaf description of every model input for a cell.
+
+    Used by ``input_specs`` (dry-run ShapeDtypeStructs) and by the data
+    pipeline (real allocation for smoke runs).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        leaves: dict = {}
+        if cfg.frontend == "audio":
+            leaves["frames"] = Leaf((B, S, cfg.d_model), spec=("act_batch",),
+                                    dtype=cfg.dtype)
+            leaves["mask"] = Leaf((B, S), spec=("act_batch",), dtype="bool")
+        else:
+            leaves["tokens"] = Leaf((B, S), spec=("act_batch",), dtype="int32")
+            if cfg.frontend == "vision":
+                leaves["patches"] = Leaf((B, cfg.n_frontend_tokens, cfg.d_model),
+                                         spec=("act_batch",), dtype=cfg.dtype)
+        if shape.kind == "train":
+            leaves["labels"] = Leaf((B, S), spec=("act_batch",), dtype="int32")
+            leaves["weights"] = Leaf((B, S), spec=("act_batch",), dtype="float32")
+        return leaves
+    # decode: one token per slot + cache lengths
+    return {"tokens": Leaf((B,), spec=("act_batch",), dtype="int32"),
+            "lengths": Leaf((B,), spec=("act_batch",), dtype="int32")}

@@ -1,0 +1,179 @@
+"""Single-source parameter schemas with *logical* sharding axes.
+
+Each module declares its parameters once as a nested dict of ``Leaf``
+entries (shape + logical partition spec + init kind).  From that one
+schema we derive: random initialization, ``jax.ShapeDtypeStruct`` trees
+(for the dry-run's allocation-free lowering), and ``NamedSharding``
+trees.
+
+Logical axes (resolved to mesh axes by a rules dict, MaxText-style):
+
+  ``tp``     tensor-parallel dim (attention heads / ffn hidden / vocab)
+  ``fsdp``   weight-sharded dim (ZeRO-3-style, usually d_model)
+  ``ep``     expert dim of MoE expert stacks
+  ``ep2``    inner dim of MoE expert stacks (sharded to fit HBM at serve)
+  ``layers`` stacked scan-group dim (never mesh-sharded)
+
+Default rule sets live in ``RULES`` — ``train`` shards weights over
+(fsdp=data, tp=model); ``serve`` keeps weights replicated over data
+except expert stacks (which would not fit one chip's HBM otherwise).
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# mesh-axis rule sets; entries may be a mesh axis name, a tuple of mesh
+# axes, or None (replicated).
+RULES: dict[str, dict[str, Any]] = {
+    "train": {"tp": "model", "fsdp": "data", "ep": "model", "ep2": "data",
+              "layers": None},
+    "serve": {"tp": "model", "fsdp": None, "ep": "model", "ep2": "data",
+              "layers": None},
+    "replicated": {"tp": None, "fsdp": None, "ep": None, "ep2": None,
+                   "layers": None},
+}
+
+
+@dataclass(frozen=True)
+class Leaf:
+    shape: tuple[int, ...]
+    spec: tuple = ()            # logical-axis entries, padded with None to rank
+    init: str = "normal"        # normal | zeros | ones | small
+    dtype: Optional[str] = None  # None -> model default
+    scale: float = 0.02
+
+    def pspec(self, rules: dict | None = None) -> P:
+        rules = rules or RULES["replicated"]
+        ent = tuple(self.spec) + (None,) * (len(self.shape) - len(self.spec))
+        resolved = []
+        for e in ent:
+            if e is None:
+                resolved.append(None)
+            elif isinstance(e, tuple):  # composite logical axes
+                axes = tuple(a for x in e for a in _as_tuple(rules.get(x, x)))
+                resolved.append(axes if axes else None)
+            else:
+                r = rules.get(e, e)
+                resolved.append(r)
+        return P(*resolved)
+
+
+def _as_tuple(x):
+    if x is None:
+        return ()
+    return x if isinstance(x, tuple) else (x,)
+
+
+def stack_leaf(leaf: Leaf, n: int) -> Leaf:
+    """Add a leading stacked-layers axis (for scan-over-groups)."""
+    return Leaf((n,) + tuple(leaf.shape), ("layers",) + tuple(leaf.spec),
+                leaf.init, leaf.dtype, leaf.scale)
+
+
+def is_leaf(x) -> bool:
+    return isinstance(x, Leaf)
+
+
+def tree_map_schema(fn, schema):
+    """Map ``fn`` over Leaf entries of a nested-dict schema."""
+    if is_leaf(schema):
+        return fn(schema)
+    if isinstance(schema, dict):
+        return {k: tree_map_schema(fn, v) for k, v in schema.items()}
+    if isinstance(schema, (list, tuple)):
+        return type(schema)(tree_map_schema(fn, v) for v in schema)
+    raise TypeError(type(schema))
+
+
+def _flatten(schema, path=()):
+    if is_leaf(schema):
+        yield path, schema
+        return
+    if isinstance(schema, dict):
+        items = schema.items()
+    else:
+        items = enumerate(schema)
+    for k, v in items:
+        yield from _flatten(v, path + (str(k),))
+
+
+def flatten_schema(schema) -> list[tuple[tuple[str, ...], Leaf]]:
+    return list(_flatten(schema))
+
+
+def shape_structs(schema, default_dtype: str = "bfloat16", mesh=None,
+                  rules: dict | None = None):
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation).
+
+    With ``mesh`` the structs carry shardings so ``jit.lower`` sees the
+    production layout without allocating anything.
+    """
+    def mk(l: Leaf):
+        dt = jnp.dtype(l.dtype or default_dtype)
+        if mesh is None:
+            return jax.ShapeDtypeStruct(l.shape, dt)
+        return jax.ShapeDtypeStruct(
+            l.shape, dt, sharding=NamedSharding(mesh, l.pspec(rules)))
+    return tree_map_schema(mk, schema)
+
+
+def pspecs(schema, rules: dict | None = None):
+    return tree_map_schema(lambda l: l.pspec(rules), schema)
+
+
+def shardings(schema, mesh, rules: dict | None = None):
+    return tree_map_schema(lambda l: NamedSharding(mesh, l.pspec(rules)), schema)
+
+
+def _stable_hash(s: str) -> int:
+    return zlib.crc32(s.encode())
+
+
+def init_params(schema, key: jax.Array, default_dtype: str = "bfloat16"):
+    """Deterministic per-path initialization (fold stable path hash into key)."""
+    flat = flatten_schema(schema)
+
+    def leaf_init(path, leaf: Leaf):
+        dt = jnp.dtype(leaf.dtype or default_dtype)
+        if leaf.init == "zeros":
+            return jnp.zeros(leaf.shape, dt)
+        if leaf.init == "ones":
+            return jnp.ones(leaf.shape, dt)
+        k = jax.random.fold_in(key, _stable_hash("/".join(path)))
+        scale = leaf.scale if leaf.init != "small" else leaf.scale * 0.1
+        return (jax.random.normal(k, leaf.shape, jnp.float32) * scale).astype(dt)
+
+    out: dict = {}
+    for path, leaf in flat:
+        node = out
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = leaf_init(path, leaf)
+    return _restructure(schema, out)
+
+
+def _restructure(schema, flat_dict):
+    """Rebuild lists/tuples that were dict-ified by path insertion."""
+    if is_leaf(schema):
+        return flat_dict
+    if isinstance(schema, dict):
+        return {k: _restructure(v, flat_dict[k]) for k, v in schema.items()}
+    if isinstance(schema, (list, tuple)):
+        return type(schema)(_restructure(v, flat_dict[str(i)]) for i, v in enumerate(schema))
+    raise TypeError(type(schema))
+
+
+def param_bytes(schema, default_dtype: str = "bfloat16") -> int:
+    total = 0
+    for _, leaf in flatten_schema(schema):
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n * jnp.dtype(leaf.dtype or default_dtype).itemsize
+    return total

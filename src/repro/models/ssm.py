@@ -1,0 +1,119 @@
+"""Mamba-2 (SSD) sequence-mixer block — jamba's non-attention layers.
+
+Forward uses the chunk-parallel SSD scan (``kernels/ops.ssd``); decode
+keeps a tiny O(1) recurrent state per layer:
+  conv state (B, d_in, d_conv-1)  +  SSD state (B, nh, dh, N).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.schema import Leaf
+from repro.kernels import ops
+from repro.perf import PerfConfig, DEFAULT_PERF
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    assert d_in % s.n_ssm_heads == 0
+    return s, d_in, s.n_ssm_heads, d_in // s.n_ssm_heads
+
+
+def mamba_schema(cfg: ModelConfig) -> dict:
+    s, d_in, nh, dh = _dims(cfg)
+    d = cfg.d_model
+    return {
+        "in_proj": Leaf((d, 2 * d_in), spec=("fsdp", "tp")),
+        "conv_w": Leaf((d_in, s.d_conv), spec=("tp", None)),
+        "conv_b": Leaf((d_in,), init="zeros"),
+        "x_to_dt": Leaf((d_in, nh), spec=("tp", None)),
+        "dt_bias": Leaf((nh,), init="zeros"),
+        "x_to_bc": Leaf((d_in, 2 * s.d_state), spec=("tp", None)),
+        "a_log": Leaf((nh,), init="zeros", dtype="float32"),   # A = -exp(a_log)
+        "d_skip": Leaf((nh,), init="ones", dtype="float32"),
+        "norm": Leaf((d_in,), init="ones"),
+        "out_proj": Leaf((d_in, d), spec=("tp", "fsdp"), init="small"),
+    }
+
+
+def _causal_conv(w, b, x, *, init_state=None):
+    """Depthwise causal conv over S via shifted adds.  x: (B, S, d_in);
+    w: (d_in, k).  init_state: (B, k-1, d_in) previous inputs or None."""
+    k = w.shape[1]
+    if init_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = init_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # (B, S+k-1, d_in)
+    S = x.shape[1]
+    out = sum(xp[:, j:j + S] * w[:, j][None, None] for j in range(k))
+    return out + b[None, None]
+
+
+def _split_heads(x, nh):
+    b, s, d_in = x.shape
+    return x.reshape(b, s, nh, d_in // nh)
+
+
+def mamba_forward(cfg: ModelConfig, p, x, *, perf: PerfConfig = DEFAULT_PERF):
+    """x: (B, S, d) -> (B, S, d)."""
+    s, d_in, nh, dh = _dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xi, z = xz[..., :d_in], xz[..., d_in:]
+    xc = jax.nn.silu(_causal_conv(p["conv_w"], p["conv_b"], xi)
+                     .astype(jnp.float32)).astype(x.dtype)
+    dt = jax.nn.softplus(
+        jnp.einsum("bse,eh->bsh", xc, p["x_to_dt"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    bc = jnp.einsum("bse,en->bsn", xc, p["x_to_bc"])
+    Bm, Cm = bc[..., :s.d_state], bc[..., s.d_state:]
+    A = -jnp.exp(p["a_log"])
+    y, _ = ops.ssd(_split_heads(xc, nh), dt, A, Bm, Cm, p["d_skip"],
+                   chunk=min(perf.scan_chunk, s.chunk))
+    y = y.reshape(*x.shape[:2], d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    # gated RMSNorm (Mamba-2 style)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + cfg.norm_eps)
+         * p["norm"].astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+
+
+def mamba_state_schema(cfg: ModelConfig, batch: int) -> dict:
+    s, d_in, nh, dh = _dims(cfg)
+    return {
+        "conv": Leaf((batch, s.d_conv - 1, d_in), spec=("act_batch", None, "tp"),
+                     init="zeros"),
+        "h": Leaf((batch, nh, dh, s.d_state), spec=("act_batch", None, "tp"),
+                  init="zeros", dtype="float32"),
+    }
+
+
+def mamba_decode(cfg: ModelConfig, p, x, state, *,
+                 perf: PerfConfig = DEFAULT_PERF):
+    """x: (B, 1, d); state {conv, h}.  Returns (out (B,1,d), new_state)."""
+    s, d_in, nh, dh = _dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xi, z = xz[..., :d_in], xz[..., d_in:]
+    xc = _causal_conv(p["conv_w"], p["conv_b"], xi, init_state=state["conv"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    new_conv = jnp.concatenate([state["conv"][:, 1:], xi.astype(state["conv"].dtype)],
+                               axis=1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bse,eh->bsh", xc, p["x_to_dt"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    bc = jnp.einsum("bse,en->bsn", xc, p["x_to_bc"])
+    Bm, Cm = bc[..., :s.d_state], bc[..., s.d_state:]
+    A = -jnp.exp(p["a_log"])
+    y, h_new = ops.ssd_decode(state["h"], _split_heads(xc, nh)[:, 0], dt[:, 0],
+                              A, Bm[:, 0], Cm[:, 0], p["d_skip"])
+    y = y.reshape(x.shape[0], 1, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + cfg.norm_eps)
+         * p["norm"].astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, {"conv": new_conv, "h": h_new.astype(state["h"].dtype)}

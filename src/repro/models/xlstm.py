@@ -1,0 +1,236 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel) and sLSTM
+(scalar memory, sequential recurrence with exponential gating).
+
+Simplifications vs the paper, recorded in DESIGN.md:
+  * sLSTM's block-diagonal recurrent matrices -> diagonal (per-unit)
+    recurrent weights.
+  * both blocks share the mLSTM pre-up-projection structure
+    (proj_factor 2.0) instead of sLSTM's post-MLP variant.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.schema import Leaf
+from repro.kernels import ops
+from repro.perf import PerfConfig, DEFAULT_PERF
+
+
+def _dims(cfg: ModelConfig):
+    x = cfg.xlstm
+    d_in = int(x.proj_factor * cfg.d_model)
+    nh = cfg.n_heads
+    assert d_in % nh == 0
+    return x, d_in, nh, d_in // nh
+
+
+# ==================================================================== mLSTM
+
+
+def mlstm_schema(cfg: ModelConfig) -> dict:
+    x, d_in, nh, dh = _dims(cfg)
+    d = cfg.d_model
+    return {
+        "up": Leaf((d, 2 * d_in), spec=("fsdp", "tp")),
+        "conv_w": Leaf((d_in, x.conv_kernel), spec=("tp", None)),
+        "conv_b": Leaf((d_in,), init="zeros"),
+        "wq": Leaf((d_in, d_in), spec=("tp", None)),
+        "wk": Leaf((d_in, d_in), spec=("tp", None)),
+        "wv": Leaf((d_in, d_in), spec=("tp", None)),
+        "w_i": Leaf((d_in, nh), spec=("tp", None), init="small"),
+        "b_i": Leaf((nh,), init="zeros", dtype="float32"),
+        "w_f": Leaf((d_in, nh), spec=("tp", None), init="small"),
+        "b_f": Leaf((nh,), init="ones", dtype="float32", scale=3.0),
+        "norm": Leaf((d_in,), init="ones"),
+        "down": Leaf((d_in, d), spec=("tp", "fsdp"), init="small"),
+    }
+
+
+def _causal_conv(w, b, x, init_state=None):
+    k = w.shape[1]
+    if init_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = init_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    S = x.shape[1]
+    out = sum(xp[:, j:j + S] * w[:, j][None, None] for j in range(k))
+    return out + b[None, None]
+
+
+def _heads(t, nh):
+    b, s, d_in = t.shape
+    return t.reshape(b, s, nh, d_in // nh)
+
+
+def _mlstm_qkvif(cfg, p, xi):
+    x, d_in, nh, dh = _dims(cfg)
+    xc = jax.nn.silu(_causal_conv(p["conv_w"], p["conv_b"], xi)
+                     .astype(jnp.float32)).astype(xi.dtype)
+    q = _heads(jnp.einsum("bse,ef->bsf", xc, p["wq"]), nh)
+    k = _heads(jnp.einsum("bse,ef->bsf", xc, p["wk"]), nh)
+    v = _heads(jnp.einsum("bse,ef->bsf", xi, p["wv"]), nh)
+    ig = jnp.einsum("bse,eh->bsh", xi, p["w_i"]).astype(jnp.float32) + p["b_i"]
+    fg = jnp.einsum("bse,eh->bsh", xi, p["w_f"]).astype(jnp.float32) + p["b_f"]
+    return xc, q, k, v, ig, fg
+
+
+def _mlstm_out(cfg, p, y, z, shape):
+    d_in = y.shape[-1] * y.shape[-2] if y.ndim == 4 else y.shape[-1]
+    y = y.reshape(*shape[:2], d_in)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + cfg.norm_eps)
+         * p["norm"].astype(jnp.float32)).astype(z.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(z.dtype)
+    return jnp.einsum("bse,ed->bsd", y, p["down"])
+
+
+def mlstm_forward(cfg: ModelConfig, p, x, *, perf: PerfConfig = DEFAULT_PERF):
+    xcfg, d_in, nh, dh = _dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["up"])
+    xi, z = xz[..., :d_in], xz[..., d_in:]
+    _, q, k, v, ig, fg = _mlstm_qkvif(cfg, p, xi)
+    y, _ = ops.mlstm(q, k, v, ig, fg, chunk=min(perf.scan_chunk, xcfg.chunk))
+    return _mlstm_out(cfg, p, y, z, x.shape)
+
+
+def mlstm_state_schema(cfg: ModelConfig, batch: int) -> dict:
+    x, d_in, nh, dh = _dims(cfg)
+    ab = ("act_batch",)
+    return {
+        "C": Leaf((batch, nh, dh, dh), spec=ab + (None, "tp"), init="zeros",
+                  dtype="float32"),
+        "n": Leaf((batch, nh, dh), spec=ab + (None, "tp"), init="zeros",
+                  dtype="float32"),
+        "m": Leaf((batch, nh), spec=ab, init="zeros", dtype="float32"),
+        "conv": Leaf((batch, x.conv_kernel - 1, d_in), spec=ab + (None, "tp"),
+                     init="zeros"),
+    }
+
+
+def mlstm_decode(cfg: ModelConfig, p, x, state, *,
+                 perf: PerfConfig = DEFAULT_PERF):
+    xcfg, d_in, nh, dh = _dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["up"])
+    xi, z = xz[..., :d_in], xz[..., d_in:]
+    xc = _causal_conv(p["conv_w"], p["conv_b"], xi, init_state=state["conv"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    new_conv = jnp.concatenate(
+        [state["conv"][:, 1:], xi.astype(state["conv"].dtype)], axis=1)
+    q = _heads(jnp.einsum("bse,ef->bsf", xc, p["wq"]), nh)[:, 0]
+    k = _heads(jnp.einsum("bse,ef->bsf", xc, p["wk"]), nh)[:, 0]
+    v = _heads(jnp.einsum("bse,ef->bsf", xi, p["wv"]), nh)[:, 0]
+    ig = (jnp.einsum("be,eh->bh", xi[:, 0], p["w_i"]).astype(jnp.float32)
+          + p["b_i"])
+    fg = (jnp.einsum("be,eh->bh", xi[:, 0], p["w_f"]).astype(jnp.float32)
+          + p["b_f"])
+    y, (C, n, m) = ops.mlstm_decode(
+        (state["C"], state["n"], state["m"]), q, k, v, ig, fg)
+    out = _mlstm_out(cfg, p, y[:, None], z, x.shape)
+    return out, {"C": C, "n": n, "m": m, "conv": new_conv}
+
+
+# ==================================================================== sLSTM
+
+
+def slstm_schema(cfg: ModelConfig) -> dict:
+    x, d_in, nh, dh = _dims(cfg)
+    d = cfg.d_model
+    sch = {
+        "up": Leaf((d, 2 * d_in), spec=("fsdp", "tp")),
+        "norm": Leaf((d_in,), init="ones"),
+        "down": Leaf((d_in, d), spec=("tp", "fsdp"), init="small"),
+    }
+    for g in ("i", "f", "z", "o"):
+        sch[f"w_{g}"] = Leaf((d_in, d_in), spec=("tp", None), init="small")
+        sch[f"r_{g}"] = Leaf((d_in,), init="small")     # diagonal recurrence
+        sch[f"b_{g}"] = Leaf((d_in,), init="ones" if g == "f" else "zeros",
+                             dtype="float32")
+    return sch
+
+
+def _slstm_scan(p, xi, state, *, time_chunk: int = 128):
+    """Sequential sLSTM over S.  xi: (B, S, d_in) pre-activations source.
+
+    The recurrence is inherently sequential (h feeds the gates), but the
+    backward pass need not save every step's carry: the time axis is
+    scanned in ``time_chunk`` blocks with ``jax.checkpoint`` on the
+    inner scan, so only chunk-boundary states are saved and each chunk
+    is recomputed during backprop (gradient checkpointing over time —
+    cuts the train-cell's saved-state memory by ~time_chunk x)."""
+    pre = {g: jnp.einsum("bse,ef->bsf", xi, p[f"w_{g}"]).astype(jnp.float32)
+           + p[f"b_{g}"] for g in ("i", "f", "z", "o")}
+    r = {g: p[f"r_{g}"].astype(jnp.float32) for g in ("i", "f", "z", "o")}
+
+    def step(carry, inp):
+        c, n, m, h = carry
+        pi, pf, pz, po = inp
+        it = pi + r["i"] * h
+        ft = pf + r["f"] * h
+        zt = jnp.tanh(pz + r["z"] * h)
+        ot = jax.nn.sigmoid(po + r["o"] * h)
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        fd = jnp.exp(logf + m - m_new)
+        idc = jnp.exp(it - m_new)
+        c = fd * c + idc * zt
+        n = fd * n + idc
+        h = ot * c / jnp.maximum(n, 1e-6)
+        return (c, n, m_new, h), h
+
+    S = xi.shape[1]
+    inps = tuple(pre[g].transpose(1, 0, 2) for g in ("i", "f", "z", "o"))
+    if S % time_chunk or S <= time_chunk:
+        (c, n, m, h), ys = jax.lax.scan(step, state, inps)
+        return ys.transpose(1, 0, 2), (c, n, m, h)
+
+    nc = S // time_chunk
+    inps_c = tuple(t.reshape(nc, time_chunk, *t.shape[1:]) for t in inps)
+
+    @jax.checkpoint
+    def chunk(carry, ci):
+        return jax.lax.scan(step, carry, ci)
+
+    (c, n, m, h), ys = jax.lax.scan(chunk, state, inps_c)
+    ys = ys.reshape(S, *ys.shape[2:])
+    return ys.transpose(1, 0, 2), (c, n, m, h)
+
+
+def slstm_forward(cfg: ModelConfig, p, x, *, perf: PerfConfig = DEFAULT_PERF):
+    xcfg, d_in, nh, dh = _dims(cfg)
+    B = x.shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, p["up"])
+    xi, z = xz[..., :d_in], xz[..., d_in:]
+    zeros = jnp.zeros((B, d_in), jnp.float32)
+    ys, _ = _slstm_scan(p, xi, (zeros, zeros, zeros, zeros))
+    y = ys.astype(x.dtype)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + cfg.norm_eps)
+         * p["norm"].astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", y, p["down"])
+
+
+def slstm_state_schema(cfg: ModelConfig, batch: int) -> dict:
+    x, d_in, nh, dh = _dims(cfg)
+    mk = lambda: Leaf((batch, d_in), spec=("act_batch", "tp"), init="zeros",
+                      dtype="float32")
+    return {"c": mk(), "n": mk(), "m": mk(), "h": mk()}
+
+
+def slstm_decode(cfg: ModelConfig, p, x, state, *,
+                 perf: PerfConfig = DEFAULT_PERF):
+    xcfg, d_in, nh, dh = _dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["up"])
+    xi, z = xz[..., :d_in], xz[..., d_in:]
+    st = (state["c"], state["n"], state["m"], state["h"])
+    ys, (c, n, m, h) = _slstm_scan(p, xi, st)
+    y = ys.astype(x.dtype)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + cfg.norm_eps)
+         * p["norm"].astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["down"])
+    return out, {"c": c, "n": n, "m": m, "h": h}

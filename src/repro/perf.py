@@ -1,0 +1,45 @@
+"""Runtime / performance knobs, separate from architecture configs.
+
+Arch configs (src/repro/configs) are the assignment's fixed facts; a
+``PerfConfig`` holds everything the §Perf hillclimb is allowed to turn:
+kernel implementation choices, block sizes, dispatch algorithms, remat
+policy, sharding rule-set names.  The paper-faithful baseline is
+``DEFAULT_PERF``; hillclimb iterations construct variants via
+``dataclasses.replace`` and record them in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class PerfConfig:
+    # attention implementation: blockwise (pure-JAX flash, CPU/dry-run),
+    # naive (O(S^2) oracle, tests only), pallas (TPU kernel / interpret)
+    attn_impl: str = "blockwise"
+    block_q: int = 512
+    block_k: int = 1024
+    # MoE dispatch: a2a (shard_map all-to-all expert parallelism — the
+    # shipping default; falls back to gather without a mesh), gather
+    # (capacity dispatch under pure GSPMD), dense (naive comparison):
+    moe_impl: str = "a2a"
+    capacity_factor: float = 1.25
+    # rematerialisation policy for the scanned layer groups
+    remat: str = "dots"          # none | dots | full
+    # sharding rule-set names (see models/schema.RULES + launch/mesh.py)
+    rules_train: str = "train"
+    rules_serve: str = "serve"
+    # training extras
+    zero1: bool = True           # shard optimizer state over data axis
+    grad_compress: bool = False  # int8 all-reduce with error feedback
+    microbatches: int = 1        # gradient-accumulation splits
+    # ssm / xlstm chunked-scan block
+    scan_chunk: int = 256
+
+
+DEFAULT_PERF = PerfConfig()
+
+
+def replace(perf: PerfConfig, **kw) -> PerfConfig:
+    return dataclasses.replace(perf, **kw)

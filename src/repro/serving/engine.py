@@ -1,0 +1,483 @@
+"""Multi-tenant continuous-batching engine with AgentCgroup enforcement.
+
+Every engine step advances all active slots by one token (uniform
+chunked prefill: prompt/tool-result tokens are force-fed one per step,
+so *every* context-page allocation flows through the same charge path a
+decoded token uses).  The resource controller runs in one of two modes:
+
+  * ``inkernel``  — the AgentCgroup design: ``charge_batch`` executes
+    INSIDE the jitted step; a slot whose page charge is denied (hard
+    limit, freeze, throttle) simply does not advance *this same step*.
+    Microsecond-class reaction, no host round trip.
+  * ``userspace`` — the baseline the paper's §4.2 criticizes: the daemon
+    observes usage with a poll interval + reaction latency and gates
+    slots one-or-more steps late; bursts land before control does (the
+    engine measures the resulting budget overshoot).
+
+Host-side daemon work (lifecycle only, as in the paper): admission,
+per-tool-call child domains with intent-hint highs, freeze/thaw with
+state offload (SlotCaches/FrozenStore), downward feedback that lets a
+session shrink a pending context append (strategy reconstruction).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import domains as D
+from repro.core.controller import (ControllerConfig, DeviceDomainTable,
+                                   charge_batch, host_charge, uncharge_batch)
+from repro.core.events import Ev, EventLog
+from repro.core.intent import hint_to_high, make_feedback
+from repro.models import model as M
+from repro.perf import PerfConfig, DEFAULT_PERF
+from repro.serving.kvcache import PageAccountant, SlotCaches
+from repro.serving.sampling import sample
+from repro.serving.session import Phase, Session, SState
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    max_slots: int = 8
+    s_max: int = 512
+    pool_pages: int = 256
+    page_tokens: int = 16
+    mode: str = "inkernel"               # inkernel | userspace | nolimit
+    ctrl: ControllerConfig = ControllerConfig(step_ms=10.0)
+    temperature: float = 0.0
+    # daemon knobs
+    freeze_threshold: float = 0.97
+    thaw_threshold: float = 0.80
+    feedback_patience_steps: int = 40
+    evict_patience_steps: int = 400
+    userspace_poll_steps: int = 8        # PSI-poll analogue
+    userspace_react_steps: int = 4       # daemon decision+write latency
+    use_intent: bool = True
+    use_tool_domains: bool = True
+    use_freeze: bool = True              # graceful-degradation step 2
+    # intent hints in engine pages (LOW/MEDIUM/HIGH priority of Hint enum)
+    intent_high_pages: Optional[dict] = None
+    session_high: Optional[dict] = None  # sid -> memory.high (pages)
+    max_steps: int = 20_000
+
+
+def _gate_shape(gate, x):
+    return gate.reshape((1, gate.shape[0]) + (1,) * (x.ndim - 2))
+
+
+def _make_step_fn(cfg: ModelConfig, perf: PerfConfig, ecfg: EngineConfig):
+    ctrl_cfg = ecfg.ctrl
+
+    @functools.partial(jax.jit, static_argnames=("mode",), donate_argnums=(1, 2))
+    def step_fn(params, dstate, ctrl, tokens, lengths, dom, amt, host_gate,
+                step_no, key, *, mode: str):
+        if mode == "inkernel":
+            # in-step enforcement: charge + gate inside the same program
+            ctrl, granted, stalled = charge_batch(ctrl, dom, amt, step_no,
+                                                  ctrl_cfg)
+            gate = granted
+        else:
+            # user-space baseline: the (stale) host gate decides; usage is
+            # charged after the fact, so bursts overshoot the budget
+            gate = host_gate & (dom >= 0)
+            ctrl = uncharge_batch(ctrl, jnp.where(gate, dom, -1), -amt)
+            granted, stalled = gate, (dom >= 0) & ~gate
+        logits, new_state = M.decode_step(cfg, params, dstate, tokens,
+                                          lengths, perf=perf)
+        nxt = sample(logits, key, temperature=ecfg.temperature)
+        new_state = jax.tree.map(
+            lambda n, o: jnp.where(_gate_shape(gate, n), n, o),
+            new_state, dstate)
+        nxt = jnp.where(gate, nxt, tokens)
+        return nxt, new_state, ctrl, granted, stalled
+
+    return step_fn
+
+
+@dataclass
+class EngineMetrics:
+    root_usage: list = field(default_factory=list)
+    overshoot_pages: int = 0             # max pages over pool budget
+    session_overshoot_pages: int = 0     # max pages over any session high
+    throttle_triggers: int = 0
+    n_feedbacks: int = 0
+    n_freezes: int = 0
+    n_thaws: int = 0
+    n_evictions: int = 0
+    steps: int = 0
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, *,
+                 perf: PerfConfig = DEFAULT_PERF,
+                 ecfg: EngineConfig = EngineConfig(), seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.perf = perf
+        self.ecfg = ecfg
+        self.caches = SlotCaches(cfg, ecfg.max_slots, ecfg.s_max)
+        self.accountant = PageAccountant(ecfg.page_tokens)
+        self.table = DeviceDomainTable(ecfg.pool_pages,
+                                       n_domains=4 * ecfg.max_slots + 8,
+                                       cfg=ecfg.ctrl)
+        self.log = EventLog()
+        self.metrics = EngineMetrics()
+        self.sessions: dict[str, Session] = {}
+        self.waiting: list[str] = []
+        self.slot_session: list[Optional[str]] = [None] * ecfg.max_slots
+        self.step_no = 0
+        self.key = jax.random.PRNGKey(seed)
+        self._step = _make_step_fn(cfg, perf, ecfg)
+        self._host_gate = np.ones(ecfg.max_slots, bool)
+        self._tool_domain: dict[str, str] = {}
+        self._tool_seq = 0
+        self._prev_throttle = np.zeros(self.table.n, np.int64)
+
+    # ------------------------------------------------------------ admission
+
+    def submit(self, session: Session) -> None:
+        self.sessions[session.sid] = session
+        tenant_path = f"/{session.tenant}"
+        if tenant_path not in self.table.index:
+            self.table.create(tenant_path)
+        self.waiting.append(session.sid)
+
+    def _try_admit(self) -> None:
+        still = []
+        for sid in self.waiting:
+            s = self.sessions[sid]
+            slot = self.caches.alloc_slot()
+            if slot is None:
+                still.append(sid)
+                continue
+            s.slot = slot
+            low = 0
+            if s.priority == D.HIGH:
+                low = self.ecfg.pool_pages            # below_low protection
+            high = (self.ecfg.session_high or {}).get(s.sid, D.UNLIMITED)
+            s.dom_idx = self.table.create(s.domain, priority=s.priority,
+                                          low=low, high=high)
+            s.t_admit = self.step_no
+            self.slot_session[slot] = sid
+            s.start()
+            self.log.emit(self.step_no, Ev.ADMIT, s.domain)
+        self.waiting = still
+
+    # --------------------------------------------------- tool-call domains
+
+    def _sync_tool_domain(self, s: Session) -> None:
+        """Ephemeral child domain per tool-result burst (bash-wrapper
+        analogue); intent hints set its memory.high."""
+        if not self.ecfg.use_tool_domains:
+            return
+        in_burst = bool(s.feed_queue) and s.length > len(s.prompt)
+        has = s.sid in self._tool_domain
+        if in_burst and not has:
+            self._tool_seq += 1
+            path = f"{s.domain}/tool_{self._tool_seq}"
+            high = D.UNLIMITED
+            if self.ecfg.use_intent:
+                from repro.core.intent import Hint
+                table = self.ecfg.intent_high_pages or {
+                    Hint.LOW: 4, Hint.MEDIUM: 10, Hint.HIGH: 24}
+                hint = s.declared_hint()
+                high = table.get(hint, table[Hint.MEDIUM])
+            idx = self.table.create(path, high=high, priority=s.priority)
+            self._tool_domain[s.sid] = path
+            s.dom_idx = idx
+        elif not in_burst and has:
+            path = self._tool_domain.pop(s.sid)
+            residual = self.table.usage(path)
+            self.table.remove(path)                    # releases chain
+            s.dom_idx = self.table.index[s.domain]
+            if residual:
+                # context pages persist: move the charge to the session
+                self.table.state = host_charge(self.table.state,
+                                               s.dom_idx, residual)
+
+    # -------------------------------------------------------------- daemon
+
+    def _userspace_policy(self) -> None:
+        """User-space throttle daemon: the SAME graduated-delay policy the
+        in-kernel path applies, but computed from telemetry polled every
+        ``userspace_poll_steps`` and applied ``userspace_react_steps``
+        late — the §4.2 responsiveness gap.  Bursts land before control
+        does; the per-session ``high`` overshoot metric quantifies it."""
+        e = self.ecfg
+        if self.step_no % e.userspace_poll_steps == 0:
+            usage = np.asarray(self.table.state["usage"])
+            high = np.asarray(self.table.state["high"])
+            maxl = np.asarray(self.table.state["max"])
+            decisions = {}
+            for slot, sid in enumerate(self.slot_session):
+                if sid is None:
+                    continue
+                s = self.sessions[sid]
+                chain = [s.dom_idx]
+                parent = np.asarray(self.table.state["parent"])
+                while parent[chain[-1]] >= 0:
+                    chain.append(int(parent[chain[-1]]))
+                over = max((usage[i] - high[i]) / max(high[i], 1)
+                           for i in chain)
+                hard = any(usage[i] >= maxl[i] for i in chain)
+                if over > 0 or hard:
+                    dly = int(np.ceil(min(
+                        e.ctrl.max_delay_ms,
+                        e.ctrl.base_delay_ms
+                        * (1 + e.ctrl.overage_gain * max(over, 0.0)))
+                        / e.ctrl.step_ms)) or 1
+                    decisions[slot] = self.step_no + e.userspace_react_steps + dly
+            self._pending_gate = (self.step_no + e.userspace_react_steps,
+                                  decisions)
+
+    def _apply_pending_gate(self) -> None:
+        pg = getattr(self, "_pending_gate", None)
+        if pg is not None and self.step_no >= pg[0]:
+            self._ungate_step = getattr(self, "_ungate_step",
+                                        np.zeros(self.ecfg.max_slots))
+            for slot, until in pg[1].items():
+                self._ungate_step[slot] = max(self._ungate_step[slot], until)
+                self.metrics.throttle_triggers += 1
+            self._pending_gate = None
+        ug = getattr(self, "_ungate_step", None)
+        if ug is not None:
+            self._host_gate = ug <= self.step_no
+
+    def _daemon(self) -> None:
+        e = self.ecfg
+        root_usage = int(self.table.state["usage"][0])
+        self.metrics.root_usage.append(root_usage)
+        self.metrics.overshoot_pages = max(
+            self.metrics.overshoot_pages, root_usage - e.pool_pages)
+        usage = np.asarray(self.table.state["usage"])
+        high = np.asarray(self.table.state["high"])
+        lim = high < D.UNLIMITED
+        if lim.any():
+            self.metrics.session_overshoot_pages = max(
+                self.metrics.session_overshoot_pages,
+                int((usage[lim] - high[lim]).max()))
+        # freeze under extreme pressure (graceful degradation step 2)
+        if e.use_freeze and root_usage > e.freeze_threshold * e.pool_pages:
+            cands = [self.sessions[sid] for sid in self.slot_session
+                     if sid is not None
+                     and self.sessions[sid].state is SState.RUNNING
+                     and self.sessions[sid].priority == D.LOW]
+            if cands:
+                victim = max(cands, key=lambda s: s.pages)
+                self._freeze(victim)
+        else:
+            frozen = [s for s in self.sessions.values()
+                      if s.state is SState.FROZEN]
+            if frozen and self.caches.n_free > 0:
+                cand = min(frozen, key=lambda s: s.pages)
+                if (root_usage + cand.pages
+                        < e.thaw_threshold * e.pool_pages):
+                    self._thaw(cand)
+        self._try_admit()
+
+    def _freeze(self, s: Session) -> None:
+        if s.sid in self._tool_domain:
+            path = self._tool_domain.pop(s.sid)
+            resid = self.table.usage(path)
+            self.table.remove(path)
+            if resid:
+                self.table.state = host_charge(
+                    self.table.state, self.table.index[s.domain], resid)
+        self.caches.freeze_slot(s.sid, s.slot, pages=s.pages,
+                                meta={"length": s.length})
+        self.slot_session[s.slot] = None
+        # release pages (offloaded to host) + freeze the domain
+        self.table.state = uncharge_batch(
+            self.table.state, jnp.array([self.table.index[s.domain]]),
+            jnp.array([s.pages], jnp.int32))
+        self.table.set_frozen(s.domain, True)
+        s.slot = -1
+        s.state = SState.FROZEN
+        s.n_freezes += 1
+        self.metrics.n_freezes += 1
+        self.log.emit(self.step_no, Ev.FREEZE, s.domain, pages=s.pages)
+
+    def _thaw(self, s: Session) -> None:
+        slot, meta = self.caches.thaw_slot(s.sid)
+        self.table.set_frozen(s.domain, False)
+        self.table.state = host_charge(
+            self.table.state, self.table.index[s.domain], s.pages)
+        s.slot = slot
+        s.dom_idx = self.table.index[s.domain]
+        self.slot_session[slot] = s.sid
+        s.state = SState.RUNNING
+        self.metrics.n_thaws += 1
+        self.log.emit(self.step_no, Ev.THAW, s.domain)
+
+    def _finish(self, s: Session) -> None:
+        if s.sid in self._tool_domain:
+            path = self._tool_domain.pop(s.sid)
+            self.table.remove(path)
+        self.table.state = uncharge_batch(
+            self.table.state, jnp.array([self.table.index[s.domain]]),
+            jnp.array([s.pages], jnp.int32))
+        self.table.remove(s.domain)
+        self.caches.free_slot(s.slot)
+        self.slot_session[s.slot] = None
+        s.slot = -1
+        s.state = SState.DONE
+        s.t_done = self.step_no
+        self.log.emit(self.step_no, Ev.DONE, s.domain)
+
+    def _evict(self, s: Session) -> None:
+        """Last resort — the paper's triple-penalty path; counted so the
+        benchmarks can show how rarely it fires."""
+        if s.sid in self._tool_domain:
+            self.table.remove(self._tool_domain.pop(s.sid))
+        self.table.state = uncharge_batch(
+            self.table.state, jnp.array([self.table.index[s.domain]]),
+            jnp.array([s.pages], jnp.int32))
+        self.table.remove(s.domain)
+        if s.slot >= 0:
+            self.caches.free_slot(s.slot)
+            self.slot_session[s.slot] = None
+        s.state = SState.EVICTED
+        s.t_done = self.step_no
+        self.metrics.n_evictions += 1
+        self.log.emit(self.step_no, Ev.EVICT, s.domain)
+
+    # ----------------------------------------------------------------- step
+
+    def step(self) -> None:
+        e = self.ecfg
+        if self.ecfg.mode == "userspace":
+            self._userspace_policy()
+            self._apply_pending_gate()
+        tokens = np.zeros(e.max_slots, np.int32)
+        lengths = np.zeros(e.max_slots, np.int32)
+        dom = np.full(e.max_slots, -1, np.int32)
+        amt = np.zeros(e.max_slots, np.int32)
+        for slot, sid in enumerate(self.slot_session):
+            if sid is None:
+                continue
+            s = self.sessions[sid]
+            if s.state is not SState.RUNNING:
+                continue
+            self._sync_tool_domain(s)
+            tokens[slot] = s.next_input() % self.cfg.padded_vocab
+            lengths[slot] = min(s.length, e.s_max - 1)
+            dom[slot] = s.dom_idx
+            amt[slot] = self.accountant.crossing(s.length)
+        self.key, sub = jax.random.split(self.key)
+        nxt, self.caches.state, self.table.state, granted, stalled = \
+            self._step(self.params, self.caches.state, self.table.state,
+                       jnp.asarray(tokens), jnp.asarray(lengths),
+                       jnp.asarray(dom), jnp.asarray(amt),
+                       jnp.asarray(self._host_gate), self.step_no, sub,
+                       mode=("inkernel" if e.mode == "inkernel"
+                             else "userspace"))
+        nxt = np.asarray(nxt)
+        granted = np.asarray(granted)
+        # throttle-trigger accounting (memcg_bpf_ops delay counter)
+        tu = np.asarray(self.table.state["throttle_until"])
+        self.metrics.throttle_triggers += int(np.sum(tu > self._prev_throttle))
+        self._prev_throttle = np.maximum(tu, self._prev_throttle)
+
+        for slot, sid in enumerate(self.slot_session):
+            if sid is None:
+                continue
+            s = self.sessions[sid]
+            if s.state is not SState.RUNNING:
+                continue
+            if granted[slot]:
+                if s.stall_started is not None:
+                    s.alloc_latencies_steps.append(
+                        self.step_no - s.stall_started)
+                    s.stall_started = None
+                elif amt[slot]:
+                    s.alloc_latencies_steps.append(0)
+                s.pages += int(amt[slot])
+                s.advance(int(nxt[slot]))
+                if s.finished or s.length >= e.s_max - 1:
+                    self._finish(s)
+            else:
+                s.stall_steps += 1
+                if s.stall_started is None:
+                    s.stall_started = self.step_no
+                stall = self.step_no - s.stall_started
+                # graduated feedback: first shrink the pending append;
+                # if the session is wedged against the pool wall, roll
+                # the whole tool call back (subprocess-kill + retry
+                # analogue) so its pages free and a smaller retry fits
+                if (stall > 0 and stall % e.feedback_patience_steps == 0
+                        and s.feed_queue):
+                    fb = make_feedback(s.domain, "throttled", s.pages,
+                                       int(self.table.state["high"][s.dom_idx]))
+                    if (stall >= 2 * e.feedback_patience_steps
+                            and s.burst_start_len >= 0):
+                        freed = s.rollback_burst(scale=0.5)
+                        if freed:
+                            self.table.state = uncharge_batch(
+                                self.table.state,
+                                jnp.array([s.dom_idx], jnp.int32),
+                                jnp.array([freed], jnp.int32))
+                        s.feedbacks.append(fb)
+                        self.log.emit(self.step_no, Ev.FEEDBACK, s.domain,
+                                      action="rollback", freed=freed)
+                    else:
+                        s.apply_feedback(fb, scale=0.5)
+                        self.log.emit(self.step_no, Ev.FEEDBACK, s.domain,
+                                      action="shrink")
+                    self.metrics.n_feedbacks += 1
+                elif stall > e.evict_patience_steps:
+                    self._evict(s)
+        self._daemon()
+        self.step_no += 1
+        self.metrics.steps = self.step_no
+
+    def run(self, max_steps: Optional[int] = None) -> EngineMetrics:
+        limit = max_steps or self.ecfg.max_steps
+        for _ in range(limit):
+            if all(s.state in (SState.DONE, SState.EVICTED)
+                   for s in self.sessions.values()) and not self.waiting:
+                break
+            self.step()
+        return self.metrics
+
+    # -------------------------------------------------------------- report
+
+    def report(self) -> dict:
+        e = self.ecfg
+        done = [s for s in self.sessions.values() if s.state is SState.DONE]
+        evicted = [s for s in self.sessions.values()
+                   if s.state is SState.EVICTED]
+        lat_by_prio: dict[int, list] = {}
+        for s in self.sessions.values():
+            lat_by_prio.setdefault(s.priority, []).extend(
+                x * e.ctrl.step_ms for x in s.alloc_latencies_steps)
+
+        def pct(xs, p):
+            if not xs:
+                return 0.0
+            xs = sorted(xs)
+            return xs[min(len(xs) - 1, int(round(p / 100 * (len(xs) - 1))))]
+
+        return {
+            "mode": e.mode,
+            "completed": len(done),
+            "evicted": len(evicted),
+            "survival": len(done) / max(len(self.sessions), 1),
+            "steps": self.step_no,
+            "high_p50_ms": pct(lat_by_prio.get(D.HIGH, []), 50),
+            "high_p95_ms": pct(lat_by_prio.get(D.HIGH, []), 95),
+            "low_p95_ms": pct(lat_by_prio.get(D.LOW, []), 95),
+            "throttle_triggers": self.metrics.throttle_triggers,
+            "freezes": self.metrics.n_freezes,
+            "thaws": self.metrics.n_thaws,
+            "feedbacks": self.metrics.n_feedbacks,
+            "overshoot_pages": self.metrics.overshoot_pages,
+            "session_overshoot_pages": self.metrics.session_overshoot_pages,
+            "peak_pool_pages": max(self.metrics.root_usage, default=0),
+        }

@@ -1,0 +1,19 @@
+"""Token sampling for the serving engine (jit-safe)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits, key, *, temperature: float = 0.0, top_k: int = 0):
+    """logits: (B, V) fp32 -> (B,) int32.
+
+    temperature == 0 -> greedy.  top_k > 0 restricts to the k best."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        kth = vals[..., -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,65 @@
+"""Ambient activation-sharding context.
+
+Model code calls ``constrain(x, ("act_batch", None, None))`` with
+*logical* axes; the launcher installs a rules dict (logical -> mesh axes)
+for the duration of a lowering/execution.  Outside any context the call
+is a no-op, so unit tests and single-device smoke runs need no mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_RULES: contextvars.ContextVar[Optional[dict]] = contextvars.ContextVar(
+    "activation_rules", default=None)
+_MESH: contextvars.ContextVar[Optional[object]] = contextvars.ContextVar(
+    "activation_mesh", default=None)
+
+
+@contextlib.contextmanager
+def activation_rules(rules: Optional[dict], mesh=None):
+    tok = _RULES.set(rules)
+    tok_m = _MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _RULES.reset(tok)
+        _MESH.reset(tok_m)
+
+
+def current_rules() -> Optional[dict]:
+    return _RULES.get()
+
+
+def current_mesh():
+    return _MESH.get()
+
+
+def _resolve(entry, rules) -> Any:
+    if entry is None:
+        return None
+    if isinstance(entry, tuple):
+        axes = []
+        for e in entry:
+            r = rules.get(e, e)
+            if r is None:
+                continue
+            axes.extend(r if isinstance(r, tuple) else (r,))
+        return tuple(axes) if axes else None
+    r = rules.get(entry, entry)
+    return r
+
+
+def constrain(x, logical_spec: tuple):
+    """Apply ``with_sharding_constraint`` with logical axes, if rules are
+    installed; otherwise identity."""
+    rules = _RULES.get()
+    if rules is None:
+        return x
+    ent = tuple(logical_spec) + (None,) * (x.ndim - len(logical_spec))
+    spec = P(*[_resolve(e, rules) for e in ent])
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,96 @@
+"""Optimizers + LR schedules (hand-rolled; no external deps).
+
+AdamW with decoupled weight decay; schedules: linear-warmup cosine and
+WSD (warmup-stable-decay — MiniCPM's schedule, required by the
+minicpm-2b assignment).  Optimizer state mirrors the parameter tree
+leaf-for-leaf, so it inherits the parameters' NamedShardings (with FSDP
+rules this is ZeRO-style sharded optimizer state for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "cosine"          # cosine | wsd
+    wsd_stable_frac: float = 0.8      # fraction of post-warmup steps at peak
+    min_lr_frac: float = 0.1
+
+
+def make_schedule(cfg: OptConfig) -> Callable:
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        if cfg.schedule == "cosine":
+            t = jnp.clip((step - cfg.warmup_steps)
+                         / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                         0.0, 1.0)
+            decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+                1 + jnp.cos(jnp.pi * t))
+        elif cfg.schedule == "wsd":
+            stable_end = (cfg.warmup_steps
+                          + cfg.wsd_stable_frac
+                          * (cfg.total_steps - cfg.warmup_steps))
+            t = jnp.clip((step - stable_end)
+                         / jnp.maximum(cfg.total_steps - stable_end, 1),
+                         0.0, 1.0)
+            # MiniCPM's decay phase: exponential-ish fast anneal
+            decay = cfg.min_lr_frac ** t
+        else:
+            raise ValueError(cfg.schedule)
+        return cfg.lr * warm * decay
+    return sched
+
+
+def init_opt_state(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, opt_state, params, lr, cfg: OptConfig):
+    """One AdamW step.  Params stay in their storage dtype (bf16/fp32);
+    moments are fp32."""
+    count = opt_state["count"] + 1
+    b1, b2 = cfg.betas
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1 ** count)
+        vh = v / (1 - b2 ** count)
+        step = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    new_p = treedef.unflatten([l[0] for l in leaves])
+    new_m = treedef.unflatten([l[1] for l in leaves])
+    new_v = treedef.unflatten([l[2] for l in leaves])
+    return new_p, {"m": new_m, "v": new_v, "count": count}, gnorm

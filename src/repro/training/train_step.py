@@ -1,0 +1,85 @@
+"""Training step: CE loss + AdamW, with microbatching (gradient
+accumulation via ``lax.scan``), optional int8 gradient compression with
+error feedback, and remat handled inside the model's scanned groups.
+
+``make_train_step(cfg, perf, opt_cfg)`` returns a pure function
+``(params, opt_state, batch, step) -> (params, opt_state, metrics)``
+suitable for ``jax.jit`` / the dry-run's ``jit(...).lower()``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.perf import PerfConfig, DEFAULT_PERF
+from repro.training import compression
+from repro.training.optimizer import (OptConfig, adamw_update, init_opt_state,
+                                      make_schedule)
+
+
+def init_train_state(cfg: ModelConfig, params,
+                     perf: PerfConfig = DEFAULT_PERF) -> dict:
+    st = init_opt_state(params)
+    if perf.grad_compress:
+        st["err_fb"] = compression.init_error_feedback(params)
+    return st
+
+
+def _split_microbatches(batch: dict, k: int) -> dict:
+    def f(x):
+        b = x.shape[0]
+        assert b % k == 0, (b, k)
+        return x.reshape(k, b // k, *x.shape[1:])
+    return {key: f(v) for key, v in batch.items()}
+
+
+def make_train_step(cfg: ModelConfig, perf: PerfConfig = DEFAULT_PERF,
+                    opt_cfg: OptConfig = OptConfig()) -> Callable:
+    sched = make_schedule(opt_cfg)
+
+    def loss_of(params, batch):
+        return M.loss_fn(cfg, params, batch, perf=perf)
+
+    def grads_of(params, batch):
+        if perf.microbatches <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+            return loss, metrics, grads
+        mb = _split_microbatches(batch, perf.microbatches)
+
+        def acc_step(carry, micro):
+            g_acc, l_acc = carry
+            (loss, _), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, micro)
+            g_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                 g_acc, grads)
+            return (g_acc, l_acc + loss), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (g_acc, l_acc), _ = jax.lax.scan(acc_step, (g0, 0.0), mb)
+        k = float(perf.microbatches)
+        grads = jax.tree.map(lambda g: g / k, g_acc)
+        loss = l_acc / k
+        return loss, {"loss": loss}, grads
+
+    def train_step(params, opt_state, batch, step):
+        loss, metrics, grads = grads_of(params, batch)
+        if perf.grad_compress:
+            grads, new_err = compression.quantize_with_feedback(
+                grads, opt_state["err_fb"])
+        lr = sched(step)
+        new_params, new_opt, gnorm = adamw_update(
+            grads, opt_state, params, lr, opt_cfg)
+        if perf.grad_compress:
+            new_opt["err_fb"] = new_err
+        out_metrics = {"loss": loss, "lr": lr, "grad_norm": gnorm}
+        if "ce" in metrics:
+            out_metrics["ce"] = metrics["ce"]
+        return new_params, new_opt, out_metrics
+
+    return train_step

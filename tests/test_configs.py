@@ -1,0 +1,95 @@
+"""Assignment conformance: every arch config matches the assigned
+numbers; the 40-cell applicability matrix is exactly as designed."""
+import pytest
+
+from repro.configs import (ARCH_IDS, SHAPES, all_configs, cell_applicability,
+                           get_config, iter_cells, reduced)
+
+ASSIGNED = {
+    # arch: (layers, d_model, heads, kv, d_ff, vocab)
+    "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+    "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256),
+    "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+    "minicpm-2b": (40, 2304, 36, 36, 5760, 122753),
+    "internlm2-20b": (48, 6144, 48, 8, 16384, 92544),
+    "pixtral-12b": (40, 5120, 32, 8, 14336, 131072),
+    "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+    "deepseek-v2-236b": (60, 5120, 128, 128, 1536, 102400),
+    "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+    "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_assigned_numbers(arch):
+    cfg = get_config(arch)
+    L, d, h, kv, ff, v = ASSIGNED[arch]
+    assert cfg.n_layers == L and cfg.d_model == d
+    assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff and cfg.vocab == v
+
+
+def test_moe_configs():
+    j = get_config("jamba-v0.1-52b").moe
+    assert (j.n_experts, j.top_k) == (16, 2)
+    ds = get_config("deepseek-v2-236b")
+    assert (ds.moe.n_experts, ds.moe.top_k, ds.moe.n_shared) == (160, 6, 2)
+    assert ds.mla.kv_lora_rank == 512
+    l4 = get_config("llama4-maverick-400b-a17b").moe
+    assert (l4.n_experts, l4.top_k) == (128, 1)
+
+
+def test_param_counts_in_band():
+    """Analytic totals should land near the advertised sizes."""
+    bands = {
+        "llama3.2-3b": (2.5e9, 4.5e9),
+        "phi3-medium-14b": (11e9, 16e9),
+        "minicpm-2b": (2e9, 3.6e9),
+        "internlm2-20b": (17e9, 23e9),
+        "pixtral-12b": (10e9, 14.5e9),
+        "deepseek-v2-236b": (200e9, 260e9),
+        "llama4-maverick-400b-a17b": (320e9, 440e9),
+        "jamba-v0.1-52b": (44e9, 60e9),
+        "hubert-xlarge": (0.7e9, 1.3e9),
+        "xlstm-350m": (0.25e9, 0.55e9),
+    }
+    for arch, (lo, hi) in bands.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_active_params_moe():
+    ds = get_config("deepseek-v2-236b")
+    active = ds.param_count(active_only=True)
+    total = ds.param_count()
+    assert active < total * 0.2, (active, total)
+
+
+def test_cell_matrix():
+    cells = list(iter_cells())
+    assert len(cells) == 40
+    skips = [(a, s.name, r) for a, s, ok, r in cells if not ok]
+    # hubert: decode_32k + long_500k; 7 full-attention archs: long_500k
+    assert len(skips) == 9, skips
+    assert sum(1 for a, s, _ in skips if a == "hubert-xlarge") == 2
+    long_runners = [a for a, s, ok, _ in cells
+                    if s.name == "long_500k" and ok]
+    assert sorted(long_runners) == ["jamba-v0.1-52b", "xlstm-350m"]
+
+
+def test_reduced_same_family():
+    for arch in ARCH_IDS:
+        full, red = get_config(arch), reduced(get_config(arch))
+        assert red.family == full.family
+        assert red.layer_kinds() == full.layer_kinds()[:red.group_size]
+        assert (red.moe is None) == (full.moe is None)
+        assert red.n_layers <= 8 and red.d_model <= 128
+
+
+def test_group_pattern_jamba():
+    cfg = get_config("jamba-v0.1-52b")
+    kinds = cfg.layer_kinds()
+    assert kinds.count("attn") == 1 and kinds.count("mamba") == 7
+    assert kinds[4] == "attn"
+    ffns = cfg.ffn_kinds()
+    assert ffns == ["dense", "moe"] * 4

@@ -1,0 +1,133 @@
+"""Property tests (hypothesis) for the hierarchical resource domains —
+the system's core invariants, mirroring the memcg contract."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import domains as D
+
+
+def mk_tree(cap=1000):
+    t = D.DomainTree(cap)
+    t.create("/a", high=400, priority=D.HIGH)
+    t.create("/b", max=300, priority=D.LOW)
+    t.create("/a/s1")
+    t.create("/a/s1/tool", high=50)
+    t.create("/b/s2")
+    return t
+
+
+LEAVES = ["/a/s1/tool", "/a/s1", "/b/s2", "/a", "/b"]
+
+ops = st.lists(
+    st.tuples(st.sampled_from(["charge", "uncharge", "kill", "freeze",
+                               "thaw"]),
+              st.sampled_from(LEAVES),
+              st.integers(min_value=1, max_value=200)),
+    min_size=1, max_size=60)
+
+
+@given(ops)
+@settings(max_examples=200, deadline=None)
+def test_invariants_random_ops(op_list):
+    t = mk_tree()
+    charged = {p: 0 for p in LEAVES}       # net direct charges per domain
+    for op, path, amt in op_list:
+        if op == "charge":
+            d = t.get(path)
+            before = {n.name: n.usage for n in d.ancestors()}
+            res = t.try_charge(path, amt)
+            if not res.ok:
+                # atomicity: a failed charge changes nothing
+                for n in d.ancestors():
+                    assert n.usage == before[n.name]
+            else:
+                charged[path] += amt
+        elif op == "uncharge":
+            take = min(amt, t.get(path).usage, charged[path])
+            if take > 0:
+                t.uncharge(path, take)
+                charged[path] -= take
+        elif op == "kill":
+            t.kill(path)
+            for sub in t.subtree(path):
+                for p in charged:
+                    if p == sub.name or p.startswith(sub.name + "/"):
+                        charged[p] = 0
+        elif op == "freeze":
+            t.freeze(path)
+        else:
+            t.thaw(path)
+
+        # ---- invariants after every op ----
+        # no domain exceeds its hard limit
+        for n in t.subtree("/"):
+            assert n.usage <= n.max
+            assert n.usage >= 0
+            assert n.peak >= n.usage
+        # hierarchical accounting: parent usage >= sum of children
+        for n in t.subtree("/"):
+            s = sum(c.usage for c in n.children.values())
+            assert n.usage >= s
+
+
+@given(st.integers(1, 500), st.integers(1, 500))
+@settings(max_examples=100, deadline=None)
+def test_charge_uncharge_roundtrip(a, b):
+    t = mk_tree(cap=2000)
+    r1 = t.try_charge("/a/s1", a)
+    r2 = t.try_charge("/b/s2", b)
+    if r1.ok:
+        t.uncharge("/a/s1", a)
+    if r2.ok:
+        t.uncharge("/b/s2", b)
+    assert t.root.usage == 0
+    assert t.get("/a").usage == 0 and t.get("/b").usage == 0
+
+
+def test_frozen_domain_denies_charge():
+    t = mk_tree()
+    t.freeze("/b")
+    assert not t.try_charge("/b/s2", 1).ok
+    t.thaw("/b")
+    assert t.try_charge("/b/s2", 1).ok
+
+
+def test_hard_limit_blocks_at_correct_ancestor():
+    t = mk_tree()
+    assert t.try_charge("/b/s2", 300).ok
+    res = t.try_charge("/b/s2", 1)
+    assert not res.ok and res.blocked_by == "/b"
+
+
+def test_soft_limit_reports_breach_and_throttles():
+    t = mk_tree()
+    res = t.try_charge("/a/s1/tool", 60)
+    assert res.ok and "/a/s1/tool" in res.over_high
+    d = t.throttle_delay_ms("/a/s1/tool")
+    assert d > 0
+    # HIGH-priority domains get the latency discount
+    t2 = mk_tree()
+    t2.try_charge("/a", 450)                 # over /a's high=400
+    d_high = t2.throttle_delay_ms("/a")
+    t2b = mk_tree()
+    t2b.get("/b").high = 400
+    t2b.try_charge("/b", 290)
+    assert d_high < 10.0                     # 0.1x discount applied
+
+
+def test_oom_group_atomic_kill():
+    t = mk_tree()
+    t.try_charge("/a/s1/tool", 40)
+    t.try_charge("/a/s1", 30)
+    before_root = t.root.usage
+    freed = t.kill("/a/s1")
+    assert freed == 70
+    assert t.root.usage == before_root - 70
+    assert t.get("/a/s1").killed and t.get("/a/s1/tool").killed
+
+
+def test_below_low_protection():
+    t = D.DomainTree(1000)
+    t.create("/p", high=100, low=200)
+    t.try_charge("/p", 150)                  # over high but under low
+    assert t.throttle_delay_ms("/p") == 0.0  # protected

@@ -1,0 +1,130 @@
+"""Serving-engine integration: the three controller modes on a real
+(reduced) model — survival, in-step hard guarantee, freeze context
+preservation, feedback adaptation, intent hints."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import domains as D
+from repro.models import model as M
+from repro.models.schema import init_params
+from repro.perf import DEFAULT_PERF, replace as perf_replace
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.session import Phase, Session, SState
+
+PERF = perf_replace(DEFAULT_PERF, scan_chunk=32)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = dataclasses.replace(reduced(get_config("llama3.2-3b")),
+                              dtype="float32")
+    params = init_params(M.param_schema(cfg), jax.random.PRNGKey(0),
+                         cfg.dtype)
+    return cfg, params
+
+
+def sessions():
+    hi = Session(sid="hi", tenant="t", priority=D.HIGH,
+                 prompt=list(range(2, 34)),
+                 phases=[Phase(8, 96, "test"), Phase(8, 64, "git"),
+                         Phase(12, 0)])
+    lo1 = Session(sid="lo1", tenant="t", priority=D.LOW,
+                  prompt=list(range(2, 26)),
+                  phases=[Phase(8, 160, "test"), Phase(8, 96, "test"),
+                          Phase(8, 0)])
+    lo2 = Session(sid="lo2", tenant="t", priority=D.LOW,
+                  prompt=list(range(2, 26)),
+                  phases=[Phase(8, 160, "test"), Phase(8, 96, "test"),
+                          Phase(8, 0)])
+    return [hi, lo1, lo2]
+
+
+COMMON = dict(max_slots=4, s_max=384, pool_pages=40, page_tokens=16)
+
+
+def run_mode(model, mode, **kw):
+    cfg, params = model
+    ecfg = EngineConfig(**COMMON, mode=mode, **kw)
+    eng = Engine(cfg, params, perf=PERF, ecfg=ecfg, seed=0)
+    for s in sessions():
+        eng.submit(s)
+    eng.run(6000)
+    return eng
+
+
+def test_inkernel_full_survival_and_hard_guarantee(model):
+    eng = run_mode(model, "inkernel", use_freeze=True,
+                   session_high={"lo1": 12, "lo2": 12})
+    r = eng.report()
+    assert r["survival"] == 1.0
+    assert r["overshoot_pages"] == 0          # in-step charge cannot overshoot
+    assert r["throttle_triggers"] > 0
+
+
+def test_userspace_lags(model):
+    base = run_mode(model, "userspace", use_freeze=False,
+                    use_tool_domains=False, use_intent=False,
+                    session_high={"lo1": 12, "lo2": 12})
+    ink = run_mode(model, "inkernel", use_freeze=True,
+                   session_high={"lo1": 12, "lo2": 12})
+    # the stale-gate path throttles strictly later/less than in-step
+    assert base.report()["throttle_triggers"] < ink.report()["throttle_triggers"]
+
+
+def test_nolimit_overshoots_pool(model):
+    eng = run_mode(model, "nolimit", use_freeze=False,
+                   use_tool_domains=False, use_intent=False)
+    assert eng.report()["overshoot_pages"] > 0
+
+
+def test_freeze_preserves_context(model):
+    eng = run_mode(model, "inkernel", use_freeze=True,
+                   session_high={"lo1": 12, "lo2": 12})
+    frozen = [s for s in eng.sessions.values() if s.n_freezes > 0]
+    assert eng.metrics.n_freezes >= 1 and frozen
+    for s in frozen:                          # full context length reached
+        assert s.state is SState.DONE
+        want = len(s.prompt) + sum(p.gen_tokens + p.append_tokens
+                                   for p in s.phases)
+        assert s.length == want
+
+
+def test_session_completion_lengths(model):
+    eng = run_mode(model, "inkernel", use_freeze=True,
+                   session_high={"lo1": 12, "lo2": 12})
+    for s in eng.sessions.values():
+        want = len(s.prompt) + sum(p.gen_tokens + p.append_tokens
+                                   for p in s.phases)
+        assert s.length == want, (s.sid, s.length, want)
+
+
+def test_feedback_shrinks_append(model):
+    """Against a tiny pool, sessions reconstruct strategy (shorter tool
+    results) after feedback instead of being evicted."""
+    cfg, params = model
+    # pool of 20 pages = 320 tokens: the full workload (424 tokens) does
+    # NOT fit, but a feedback-shrunk one does — eviction would be a bug
+    ecfg = EngineConfig(max_slots=2, s_max=384, pool_pages=20,
+                        page_tokens=16, mode="inkernel", use_freeze=False,
+                        feedback_patience_steps=20,
+                        evict_patience_steps=2000)
+    eng = Engine(cfg, params, perf=PERF, ecfg=ecfg, seed=0)
+    big = Session(sid="big", tenant="t", priority=D.NORMAL,
+                  prompt=list(range(2, 18)),
+                  phases=[Phase(4, 400, "test"), Phase(4, 0)])
+    eng.submit(big)
+    eng.run(6000)
+    assert big.state is SState.DONE
+    assert len(big.feedbacks) >= 1
+    want_full = 16 + 4 + 400 + 4
+    assert big.length < want_full             # scope was reduced
+
+
+def test_domain_accounting_clean_at_end(model):
+    eng = run_mode(model, "inkernel", use_freeze=True,
+                   session_high={"lo1": 12, "lo2": 12})
+    assert int(eng.table.state["usage"][0]) == 0

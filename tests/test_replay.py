@@ -1,0 +1,122 @@
+"""Trace-replay reproduction of the paper's §6 evaluation + the §4
+mismatch behaviours of the baseline policies."""
+import numpy as np
+import pytest
+
+from repro.core import domains as D
+from repro.core.events import Ev
+from repro.core.policy import (AgentCgroupPolicy, NoIsolationPolicy,
+                               PredictiveP95Policy, ReactivePSIPolicy,
+                               StaticLimitPolicy)
+from repro.traces.generator import generate_task, named_trace
+from repro.traces.replay import ReplayConfig, replay
+
+
+@pytest.fixture(scope="module")
+def fig8_traces():
+    hi = named_trace("dask/dask#11628", seed=1)
+    lo1 = named_trace("sigmavirus24/github3.py#673", seed=2)
+    lo2 = named_trace("sigmavirus24/github3.py#673", seed=3)
+    return [hi, lo1, lo2], [D.HIGH, D.LOW, D.LOW]
+
+
+LOWHIGH = {"sigmavirus24/github3.py#673": 400}
+
+
+def test_named_trace_peaks(fig8_traces):
+    traces, _ = fig8_traces
+    assert abs(traces[0].peak_mb - 421) < 2
+    assert abs(traces[1].peak_mb - 406) < 2
+
+
+def test_fig8a_tight_memory_survival(fig8_traces):
+    """1100 MB pool vs ~1233 MB demand: baseline OOM-kills (66%);
+    AgentCgroup completes everything (100%)."""
+    traces, prios = fig8_traces
+    cfg = ReplayConfig(capacity_mb=1100)
+    base = replay(traces, prios, NoIsolationPolicy(), cfg)
+    agent = replay(traces, prios, AgentCgroupPolicy(session_high=LOWHIGH),
+                   cfg)
+    assert base.survival < 1.0
+    assert base.log.count(Ev.OOM_KILL) >= 1
+    assert agent.survival == 1.0
+    assert agent.throttle_count > 0
+
+
+def test_fig8b_high_priority_latency(fig8_traces):
+    """Moderate memory: AgentCgroup reduces HIGH-priority P95 allocation
+    latency (paper: -29%) with P50 basically unchanged."""
+    traces, prios = fig8_traces
+    cfg = ReplayConfig(capacity_mb=1300)
+    base = replay(traces, prios, NoIsolationPolicy(), cfg)
+    agent = replay(traces, prios, AgentCgroupPolicy(session_high=LOWHIGH),
+                   cfg)
+    b, a = base.latency_of(D.HIGH), agent.latency_of(D.HIGH)
+    assert a.p95 < b.p95 * 0.9            # meaningful P95 reduction
+    assert abs(a.p50 - b.p50) < 1.0       # P50 untouched
+    assert base.survival == agent.survival == 1.0
+
+
+def test_static_limit_granularity_mismatch(fig8_traces):
+    """memory.max at the average kills bursty tasks; at the peak it
+    wastes most of the reservation (paper §4.1)."""
+    traces, prios = fig8_traces
+    avg = int(np.mean([t.avg_mb for t in traces]))
+    cfg = ReplayConfig(capacity_mb=5000)
+    killed = replay(traces, prios, StaticLimitPolicy(limit_mb=avg), cfg)
+    assert killed.survival < 1.0          # burst hits the average-sized max
+    peak_pol = StaticLimitPolicy(limit_mb=int(max(t.peak_mb for t in traces))
+                                 + 10)
+    ok = replay(traces, prios, peak_pol, cfg)
+    assert ok.survival == 1.0
+    # waste: peak-sized reservations admit few concurrent tasks
+    assert peak_pol.max_concurrency(1100, 0) <= 2
+
+
+def test_reactive_psi_reacts_too_late(fig8_traces):
+    """oomd-style daemon: kills arrive only after pressure is sustained,
+    and something dies (kill-as-fallback; paper §4.2/§4.3)."""
+    traces, prios = fig8_traces
+    cfg = ReplayConfig(capacity_mb=1100)
+    r = replay(traces, prios,
+               ReactivePSIPolicy(poll_ms=100.0, react_ms=40.0,
+                                 pressure_threshold=0.3), cfg)
+    assert r.survival < 1.0 or r.log.count(Ev.OOM_KILL) > 0
+
+
+def test_predictive_p95_defeated_by_nondeterminism():
+    """Autopilot-style limits from history mis-size under 1.8x-20x
+    run-to-run variance (paper §4.3)."""
+    # history from different seeds of the same tasks (non-determinism)
+    hist = {}
+    traces = []
+    for i, scale in enumerate([0.4, 0.5, 0.6]):
+        runs = [generate_task(f"task{i}", "glm", seed=s, scale=scale)
+                for s in range(3)]
+        hist[f"task{i}"] = [r.peak_mb for r in runs]
+        # the replayed run is a NEW seed whose peak may exceed history
+        traces.append(generate_task(f"task{i}", "glm", seed=99 + i,
+                                    scale=scale * 2.5))
+    cfg = ReplayConfig(capacity_mb=8000)
+    r = replay(traces, [D.NORMAL] * 3,
+               PredictiveP95Policy(hist, safety=1.1), cfg)
+    assert r.survival < 1.0               # at least one run outgrew its P95
+
+
+def test_feedback_strategy_reconstruction():
+    """Under a hard wall, the agent shrinks its burst scope after
+    feedback instead of dying (intent downward channel)."""
+    tr = generate_task("burst", "glm", seed=5, scale=2.0)
+    cfg = ReplayConfig(capacity_mb=int(tr.peak_mb * 0.7))
+    pol = AgentCgroupPolicy(hard_patience_ms=50.0)
+    r = replay([tr], [D.NORMAL], pol, cfg)
+    assert r.tasks != {} and list(r.tasks.values())[0].completed
+    assert r.log.count(Ev.FEEDBACK) > 0
+
+
+def test_freeze_preserves_completion():
+    tr1 = named_trace("dask/dask#11628", seed=10)
+    tr2 = named_trace("sigmavirus24/github3.py#673", seed=11)
+    cfg = ReplayConfig(capacity_mb=int(tr1.peak_mb + tr2.peak_mb * 0.6))
+    r = replay([tr1, tr2], [D.HIGH, D.LOW], AgentCgroupPolicy(), cfg)
+    assert r.survival == 1.0

@@ -1,0 +1,84 @@
+"""Generator calibration against the paper's §3 statistics."""
+import numpy as np
+import pytest
+
+from repro.traces.generator import generate_dataset, generate_task, named_trace
+from repro.traces.schema import to_alloc_events
+
+
+@pytest.fixture(scope="module")
+def glm_set():
+    return generate_dataset("glm", 40, seed=7)
+
+
+@pytest.fixture(scope="module")
+def haiku_set():
+    return generate_dataset("haiku", 20, seed=9)
+
+
+def test_framework_baseline(glm_set, haiku_set):
+    """~185 MB framework baseline (Haiku 183 / GLM 188)."""
+    for ds in (glm_set, haiku_set):
+        base = np.mean([t.baseline_mb for t in ds])
+        assert 165 <= base <= 205, base
+
+
+def test_duration_range(glm_set, haiku_set):
+    glm_mean = np.mean([t.duration_s for t in glm_set]) / 60
+    haiku_mean = np.mean([t.duration_s for t in haiku_set]) / 60
+    assert 7 <= glm_mean <= 15, glm_mean          # paper: 10.8 min
+    assert 3.5 <= haiku_mean <= 9, haiku_mean     # paper: 5.8 min
+
+
+def test_init_fraction(glm_set):
+    fr = np.mean([t.init_s / t.total_s for t in glm_set])
+    assert 0.28 <= fr <= 0.50, fr                 # paper: 31-48%
+
+
+def test_bursts_inside_tool_calls(glm_set):
+    """Memory bursts (>300 MB over run min) concentrate in tool calls
+    (paper: 98.5% Haiku / 67.3% GLM)."""
+    in_call = total = 0
+    for t in glm_set:
+        thr = t.baseline_mb + 112                 # ~300MB abs threshold
+        for i, m in enumerate(t.mem_mb):
+            if m > thr:
+                total += 1
+                in_call += t.in_tool_call(float(i))
+    if total:
+        assert in_call / total > 0.55, in_call / total
+
+
+def test_retry_loops(glm_set, haiku_set):
+    glm_frac = np.mean([1.0 if t.retry_groups() else 0.0 for t in glm_set])
+    assert glm_frac >= 0.8                        # paper: 97%
+    groups = np.mean([len(t.retry_groups()) for t in glm_set])
+    assert 1.0 <= groups <= 7.0, groups           # paper: 3.9
+
+
+def test_cross_task_spread(glm_set, haiku_set):
+    peaks = np.array([t.peak_mb for t in glm_set + haiku_set])
+    assert peaks.max() / peaks.min() > 5.0        # paper: 20x
+    cv = peaks.std() / peaks.mean()
+    assert cv > 0.5, cv                           # paper: CV 147%
+
+
+def test_pydicom_peak_to_avg():
+    t = named_trace("pydicom/pydicom#2022", seed=0)
+    assert abs(t.peak_mb - 4060) < 5
+    assert t.peak_to_avg > 4.0                    # paper: 15.4x on 1-s samples
+
+
+def test_run_to_run_nondeterminism():
+    runs = [generate_task("iterative/dvc#777", "glm", seed=s)
+            for s in range(6)]
+    durs = [r.duration_s for r in runs]
+    assert max(durs) / min(durs) > 1.15           # paper: 1.8x
+
+
+def test_alloc_events_conserve_memory():
+    t = generate_task("x", "glm", seed=3)
+    ev = to_alloc_events(t, accel=50.0)
+    net = sum(e.delta_mb for e in ev)
+    assert abs(net) < 1e-6
+    assert ev == sorted(ev, key=lambda e: e.t_ms)
