@@ -14,19 +14,27 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.controller import (ControllerConfig, DeviceDomainTable,
-                                   charge_batch, slot_gate)
+from repro.core.cgroup import AgentCgroup, DeviceTableBackend, DomainSpec
+from repro.core.controller import ControllerConfig
+
+
+def _throttled_view(delay_ms: float, step_ms: float):
+    """One over-``high`` charge through the unified control plane;
+    returns the device view + post-charge state + the domain index."""
+    cfg = ControllerConfig(step_ms=step_ms, base_delay_ms=delay_ms,
+                           max_delay_ms=delay_ms, overage_gain=0.0)
+    cg = AgentCgroup(DeviceTableBackend(10_000, n_domains=8, cfg=cfg))
+    idx = cg.mkdir("/s", DomainSpec(high=10))
+    view = cg.device_view()
+    st, granted, _ = view.charge(view.state, jnp.array([idx]),
+                                 jnp.array([50], jnp.int32), 0)
+    assert bool(granted[0])
+    return view, st, idx
 
 
 def mechanism_precision(delay_ms: float = 2000.0, step_ms: float = 10.0):
-    cfg = ControllerConfig(step_ms=step_ms, base_delay_ms=delay_ms,
-                           max_delay_ms=delay_ms, overage_gain=0.0)
-    tab = DeviceDomainTable(10_000, n_domains=8, cfg=cfg)
-    idx = tab.create("/s", high=10)
-    st, granted, _ = charge_batch(tab.state, jnp.array([idx]),
-                                  jnp.array([50], jnp.int32), 0, cfg)
-    assert bool(granted[0])
-    gate_fn = jax.jit(lambda s, d, t: slot_gate(s, d, t))
+    view, st, idx = _throttled_view(delay_ms, step_ms)
+    gate_fn = jax.jit(lambda s, d, t: view.gate(s, d, t))
     reopened = None
     for step in range(1, int(delay_ms / step_ms) + 10):
         if bool(gate_fn(st, jnp.array([idx]), step)[0]):
@@ -40,13 +48,8 @@ def mechanism_precision(delay_ms: float = 2000.0, step_ms: float = 10.0):
 def wallclock_precision(delay_ms: float = 2000.0, step_ms: float = 10.0):
     """Time the reopen through actual jitted gate evaluations, pacing
     steps at step_ms (the engine cadence)."""
-    cfg = ControllerConfig(step_ms=step_ms, base_delay_ms=delay_ms,
-                           max_delay_ms=delay_ms, overage_gain=0.0)
-    tab = DeviceDomainTable(10_000, n_domains=8, cfg=cfg)
-    idx = tab.create("/s", high=10)
-    st, _, _ = charge_batch(tab.state, jnp.array([idx]),
-                            jnp.array([50], jnp.int32), 0, cfg)
-    gate_fn = jax.jit(lambda s, d, t: slot_gate(s, d, t))
+    view, st, idx = _throttled_view(delay_ms, step_ms)
+    gate_fn = jax.jit(lambda s, d, t: view.gate(s, d, t))
     bool(gate_fn(st, jnp.array([idx]), 0)[0])     # warm the jit
     t0 = time.perf_counter()
     step = 0

@@ -13,8 +13,10 @@ import jax.numpy as jnp
 
 from repro.configs import SHAPES, get_config, reduced
 from repro.core import domains as D
-from repro.core.controller import (ControllerConfig, DeviceDomainTable,
-                                   charge_batch)
+from repro.core.cgroup import (AgentCgroup, DeviceTableBackend, DomainSpec,
+                               HostTreeBackend)
+from repro.core.controller import ControllerConfig
+from repro.core.intent import Hint
 from repro.data.pipeline import DataIterator
 from repro.models import model as M
 from repro.models.schema import init_params
@@ -24,25 +26,45 @@ from repro.serving.session import Phase, Session
 from repro.training.optimizer import OptConfig
 from repro.training.train_step import init_train_state, make_train_step
 
-print("== 1. hierarchical resource domains (cgroup v2 analogue) ==")
-tree = D.DomainTree(capacity=1000)
-tree.create("/tenant", high=800)
-tree.create("/tenant/sess", priority=D.HIGH)
-tree.create("/tenant/sess/tool_1", high=50)      # intent hint: memory:low
-res = tree.try_charge("/tenant/sess/tool_1", 80)
-print(f"charge 80 pages into tool domain (high=50): ok={res.ok}, "
-      f"soft-breach at {res.over_high}")
-print(f"graduated throttle delay: "
-      f"{tree.throttle_delay_ms('/tenant/sess/tool_1'):.0f} ms")
+print("== 1. one cgroupfs-style control plane, two backends ==")
 
-print("\n== 1b. the same semantics, device-resident & jitted ==")
-tab = DeviceDomainTable(1000, cfg=ControllerConfig())
-idx = tab.create("/s", high=50)
-ctrl_cfg = ControllerConfig()
-st, granted, stalled = jax.jit(
-    lambda s, d, a, t: charge_batch(s, d, a, t, ctrl_cfg))(
-    tab.state, jnp.array([idx]), jnp.array([80], jnp.int32), 0)
-print(f"in-step charge granted={bool(granted[0])}, "
+
+def drive(cg: AgentCgroup) -> dict:
+    """The SAME op sequence works against any backend: mkdir a
+    hierarchy, declare a tool-call lease from an intent hint, charge
+    through it, close the lease (residual transfers to the session)."""
+    cg.mkdir("/tenant", DomainSpec(high=800))
+    cg.mkdir("/tenant/sess", DomainSpec(priority=D.HIGH))
+    lease = cg.intent.declare("tool_1", Hint.LOW, parent="/tenant/sess",
+                              high=50)
+    ticket = cg.try_charge(lease.path, 80)
+    granted = ticket.granted
+    lease.close()                      # rmdir + residual moves upward
+    return {"granted": granted, "root": cg.usage("/"),
+            "sess": cg.usage("/tenant/sess"),
+            "sess_peak": cg.peak("/tenant/sess")}
+
+
+# zero-delay config so host and device grant/deny semantics align
+no_throttle = ControllerConfig(base_delay_ms=0.0, max_delay_ms=0.0)
+host = drive(AgentCgroup(HostTreeBackend(1000)))
+dev = drive(AgentCgroup(DeviceTableBackend(1000, cfg=no_throttle)))
+print(f"host   backend: {host}")
+print(f"device backend: {dev}")
+assert host == dev, "backends diverged!"
+
+print("\n== 1b. backend-specific extras ==")
+cg = AgentCgroup(HostTreeBackend(1000))
+cg.mkdir("/sess", DomainSpec(high=50))
+cg.try_charge("/sess", 80)
+print(f"host:   memory.events = {cg.read('/sess', 'memory.events')}, "
+      f"graduated delay {cg.throttle_delay_ms('/sess'):.0f} ms")
+dcg = AgentCgroup(DeviceTableBackend(1000, cfg=ControllerConfig()))
+idx = dcg.mkdir("/sess", DomainSpec(high=50))
+view = dcg.device_view()
+st, granted, _ = jax.jit(view.charge)(view.state, jnp.array([idx]),
+                                      jnp.array([80], jnp.int32), 0)
+print(f"device: in-step charge granted={bool(granted[0])}, "
       f"throttled until step {int(st['throttle_until'][idx])}")
 
 print("\n== 2. train a reduced llama3.2 for 10 steps ==")

@@ -1,6 +1,8 @@
 """AgentCgroup core: the paper's contribution, ported to a multi-tenant
 JAX serving pod (see DESIGN.md §2 for the kernel->TPU mapping).
 
+  cgroup      — the unified cgroupfs-style control plane (AgentCgroup
+                facade + pluggable host/device backends + intent channel)
   domains     — hierarchical resource domains (cgroup v2 analogue)
   accounting  — PSI-style pressure + allocation-latency statistics
   controller  — device-resident state + in-step (jitted) enforcement
@@ -11,6 +13,9 @@ JAX serving pod (see DESIGN.md §2 for the kernel->TPU mapping).
 """
 from repro.core.domains import (DomainTree, Domain, ChargeResult,
                                 UNLIMITED, LOW, NORMAL, HIGH)
+from repro.core.cgroup import (AgentCgroup, Backend, ChargeTicket,
+                               DeviceTableBackend, DeviceView, DomainSpec,
+                               HostTreeBackend, IntentChannel, Lease)
 from repro.core.events import Ev, Event, EventLog
 from repro.core.accounting import Accounting, LatencyStats, PSITracker
 from repro.core.intent import (Hint, AdaptiveAgentModel, Feedback,
@@ -19,7 +24,9 @@ from repro.core.freezer import FrozenStore
 
 __all__ = [
     "DomainTree", "Domain", "ChargeResult", "UNLIMITED", "LOW", "NORMAL",
-    "HIGH", "Ev", "Event", "EventLog", "Accounting", "LatencyStats",
+    "HIGH", "AgentCgroup", "Backend", "ChargeTicket", "DeviceTableBackend",
+    "DeviceView", "DomainSpec", "HostTreeBackend", "IntentChannel", "Lease",
+    "Ev", "Event", "EventLog", "Accounting", "LatencyStats",
     "PSITracker", "Hint", "AdaptiveAgentModel", "Feedback", "hint_to_high",
     "make_feedback", "parse_hint", "FrozenStore",
 ]

@@ -1,0 +1,679 @@
+"""Unified cgroupfs-style control plane for AgentCgroup (paper §5).
+
+One API, two enforcement substrates.  The paper's artifact is a single
+hierarchical interface — cgroup files plus an intent channel — yet this
+repo grew two divergent surfaces: the pure-python ``DomainTree``
+(trace replay) and the device-resident state + free functions
+(serving engine).  ``AgentCgroup`` unifies them behind the cgroupfs
+idiom:
+
+    cg = AgentCgroup(HostTreeBackend(capacity))        # or DeviceTableBackend
+    cg.mkdir("/t/sess", DomainSpec(high=400, priority=HIGH))
+    cg.write("/t/sess", "memory.high", 300)
+    cg.try_charge("/t/sess", 64)
+    cg.read("/t/sess", "memory.events")
+    cg.freeze("/t/sess"); cg.thaw("/t/sess"); cg.kill("/t/sess")
+    lease = cg.intent.declare("tool_7", Hint.HIGH, parent="/t/sess")
+    ...; lease.feedback("throttled"); lease.close()    # residual moves up
+
+Backends conform to the ``Backend`` protocol:
+
+  * ``HostTreeBackend``  — wraps ``domains.DomainTree``; the reference
+    semantics, with memcg-style event counters surfaced through
+    ``read(path, "memory.events")``.
+  * ``DeviceTableBackend`` — wraps the jax device-resident state
+    (``core/controller.py``).  Lifecycle ops run host-side (the paper's
+    lightweight daemon); per-allocation enforcement stays inside the
+    jitted engine step via ``device_view()``, whose pure ``lax``-only
+    methods the step function closes over.
+
+Because both backends speak the same op vocabulary, host/device
+cross-validation is one loop: replay an op sequence against two
+``AgentCgroup`` instances and compare ``usage``/``peak``/grants.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, Optional, Protocol, Union, runtime_checkable
+
+import numpy as np
+
+from repro.core import domains as D
+from repro.core.events import Ev, EventLog
+from repro.core.intent import Feedback, Hint, hint_to_high, make_feedback
+
+UNLIMITED = D.UNLIMITED
+
+# readable / writable control files (the cgroupfs surface)
+_READ_FILES = ("memory.current", "memory.peak", "memory.high", "memory.max",
+               "memory.low", "memory.priority", "memory.events",
+               "cgroup.freeze")
+_WRITE_FILES = ("memory.high", "memory.max", "memory.low", "memory.priority",
+                "cgroup.freeze")
+
+
+@dataclass(frozen=True)
+class DomainSpec:
+    """Creation-time limits — the values seeded into the control files."""
+    high: int = UNLIMITED
+    max: int = UNLIMITED
+    low: int = 0
+    priority: int = D.NORMAL
+
+
+@dataclass(frozen=True)
+class ChargeTicket:
+    """Unified result of a hierarchical charge attempt.
+
+    ``stalled`` marks retryable denials (freeze / throttle / hard max —
+    the engine's graceful-degradation path never OOM-kills in-step).
+    ``blocked_by``/``over_high`` carry the host backend's detail; the
+    device backend reports grants only (its detail lives in-step).
+    """
+    granted: bool
+    stalled: bool = False
+    blocked_by: Optional[str] = None
+    over_high: tuple = ()
+
+
+def parent_path(path: str) -> Optional[str]:
+    if path == "/":
+        return None
+    return path.rsplit("/", 1)[0] or "/"
+
+
+def ancestor_paths(path: str) -> list[str]:
+    """Self-first ancestor chain, derived purely from the path string —
+    identical for every backend."""
+    out = [path]
+    while (p := parent_path(out[-1])) is not None:
+        out.append(p)
+    return out
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """What a conforming enforcement substrate must provide."""
+
+    log: EventLog
+
+    def mkdir(self, path: str, spec: DomainSpec) -> int: ...
+    def rmdir(self, path: str, transfer_residual: bool) -> int: ...
+    def exists(self, path: str) -> bool: ...
+    def paths(self) -> list[str]: ...
+    def handle(self, path: str) -> int: ...
+    def path_of(self, handle: int) -> str: ...
+    def try_charge(self, path: str, pages: int,
+                   step: Optional[int]) -> ChargeTicket: ...
+    def uncharge(self, path: str, pages: int) -> None: ...
+    def charge_unchecked(self, path: str, pages: int) -> None: ...
+    def freeze(self, path: str) -> None: ...
+    def thaw(self, path: str) -> None: ...
+    def kill(self, path: str) -> int: ...
+    def read(self, path: str, file: str): ...
+    def write(self, path: str, file: str, value) -> None: ...
+    def snapshot(self) -> dict: ...
+    def set_time(self, t: float) -> None: ...
+
+
+# --------------------------------------------------------------------- host
+
+
+class HostTreeBackend:
+    """Reference backend: the pure-python ``DomainTree`` semantics."""
+
+    def __init__(self, capacity: int, log: Optional[EventLog] = None):
+        self.tree = D.DomainTree(capacity, log)
+        self.log = self.tree.log
+        self._ids: dict[str, int] = {"/": 0}
+        self._paths: dict[int, str] = {0: "/"}
+        self._next_id = 1
+
+    # lifecycle
+    def mkdir(self, path: str, spec: DomainSpec) -> int:
+        self.tree.create(path, high=spec.high, max=spec.max, low=spec.low,
+                         priority=spec.priority)
+        h = self._next_id
+        self._next_id += 1
+        self._ids[path] = h
+        self._paths[h] = path
+        return h
+
+    def rmdir(self, path: str, transfer_residual: bool) -> int:
+        residual = self.tree.get(path).usage
+        parent = parent_path(path)
+        self.tree.remove(path)           # uncharges residual from the chain
+        if transfer_residual and residual and parent is not None:
+            self.charge_unchecked(parent, residual)
+        self._paths.pop(self._ids.pop(path), None)
+        return residual
+
+    def exists(self, path: str) -> bool:
+        return self.tree.exists(path)
+
+    def paths(self) -> list[str]:
+        return list(self.tree._index)
+
+    def handle(self, path: str) -> int:
+        return self._ids[path]
+
+    def path_of(self, handle: int) -> str:
+        return self._paths[handle]
+
+    # charging
+    def try_charge(self, path: str, pages: int,
+                   step: Optional[int]) -> ChargeTicket:
+        res = self.tree.try_charge(path, pages)
+        return ChargeTicket(granted=res.ok, stalled=not res.ok,
+                            blocked_by=res.blocked_by,
+                            over_high=res.over_high)
+
+    def uncharge(self, path: str, pages: int) -> None:
+        self.tree.uncharge(path, pages)
+
+    def charge_unchecked(self, path: str, pages: int) -> None:
+        """Bookkeeping charge for lifecycle moves (residual transfer,
+        thaw re-charge): the pages are already resident, never denied."""
+        for a in self.tree.get(path).ancestors():
+            a.usage = max(0, a.usage + pages)
+            a.peak = max(a.peak, a.usage)
+
+    # subtree control
+    def freeze(self, path: str) -> None:
+        self.tree.freeze(path)
+
+    def thaw(self, path: str) -> None:
+        self.tree.thaw(path)
+
+    def kill(self, path: str) -> int:
+        return self.tree.kill(path)
+
+    # control files
+    def read(self, path: str, file: str):
+        d = self.tree.get(path)
+        if file == "memory.current":
+            return d.usage
+        if file == "memory.peak":
+            return d.peak
+        if file == "memory.high":
+            return d.high
+        if file == "memory.max":
+            return d.max
+        if file == "memory.low":
+            return d.low
+        if file == "memory.priority":
+            return d.priority
+        if file == "cgroup.freeze":
+            return int(d.frozen)
+        if file == "memory.events":
+            return {"high": d.n_high_breach, "max": d.n_max_breach,
+                    "throttle": d.n_throttle, "oom_kill": d.n_oom_kill}
+        raise KeyError(file)
+
+    def write(self, path: str, file: str, value) -> None:
+        d = self.tree.get(path)
+        if file == "memory.high":
+            d.high = int(value)
+        elif file == "memory.max":
+            d.max = int(value)
+        elif file == "memory.low":
+            d.low = int(value)
+        elif file == "memory.priority":
+            d.priority = int(value)
+        elif file == "cgroup.freeze":
+            (self.freeze if int(value) else self.thaw)(path)
+        else:
+            raise KeyError(file)
+
+    def throttle_delay_ms(self, path: str, **kw) -> float:
+        return self.tree.throttle_delay_ms(path, **kw)
+
+    def snapshot(self) -> dict:
+        idx = self.tree._index
+        order = list(idx)
+        usage = np.array([idx[p].usage for p in order], np.int64)
+        high = np.array([idx[p].high for p in order], np.int64)
+        maxl = np.array([idx[p].max for p in order], np.int64)
+        prow = {p: i for i, p in enumerate(order)}
+        parent = np.array([prow.get(parent_path(p), -1) if p != "/" else -1
+                           for p in order], np.int64)
+        active = np.ones(len(order), bool)
+        return {"paths": order, "index": prow, "usage": usage, "high": high,
+                "max": maxl, "parent": parent, "active": active}
+
+    def set_time(self, t: float) -> None:
+        self.tree.now_ms = t
+
+
+# ------------------------------------------------------------------- device
+
+
+class DeviceView:
+    """The jit-safe slice of the device backend: the live state pytree
+    plus pure (``lax``-only) enforcement functions the engine's jitted
+    step closes over — keeping in-step enforcement fully on device while
+    everything stateful goes through the facade."""
+
+    def __init__(self, backend: "DeviceTableBackend"):
+        self._backend = backend
+        self.cfg = backend.table.cfg
+
+    @property
+    def state(self) -> dict:
+        return self._backend.table.state
+
+    def charge(self, state, dom, amt, step):
+        """In-step hierarchical charge: (state, granted, stalled)."""
+        from repro.core import controller as C
+        return C.charge_batch(state, dom, amt, step, self.cfg)
+
+    def account(self, state, dom, amt):
+        """Post-hoc unconditional charge (the user-space baseline:
+        usage recorded after the stale gate already decided)."""
+        from repro.core import controller as C
+        return C.uncharge_batch(state, dom, -amt)
+
+    def uncharge(self, state, dom, amt):
+        from repro.core import controller as C
+        return C.uncharge_batch(state, dom, amt)
+
+    def gate(self, state, dom, step):
+        """Per-slot advance gate (no frozen/throttled ancestor)."""
+        from repro.core import controller as C
+        return C.slot_gate(state, dom, step)
+
+    def commit(self, state: dict) -> None:
+        """Adopt the (possibly donated) post-step state."""
+        self._backend.table.state = state
+
+
+class DeviceTableBackend:
+    """Device-resident backend: lifecycle host-side, enforcement in-step.
+
+    Wraps ``controller.DeviceDomainTable``.  ``try_charge`` here is the
+    *host-driven* path (lifecycle, replay, cross-validation); the
+    serving engine charges inside its jitted step through
+    ``device_view()`` instead.
+    """
+
+    def __init__(self, capacity: int, n_domains: int = 64, cfg=None,
+                 log: Optional[EventLog] = None):
+        from repro.core.controller import ControllerConfig, DeviceDomainTable
+        self.table = DeviceDomainTable(capacity, n_domains,
+                                       cfg or ControllerConfig())
+        self.log = log if log is not None else EventLog()
+        self._now = 0.0
+
+    @property
+    def n_domains(self) -> int:
+        return self.table.n
+
+    def device_view(self) -> DeviceView:
+        return DeviceView(self)
+
+    # lifecycle
+    def mkdir(self, path: str, spec: DomainSpec) -> int:
+        assert len(ancestor_paths(path)) <= 4, f"{path}: deeper than DEPTH"
+        idx = self.table.create(path, high=spec.high, max=spec.max,
+                                low=spec.low, priority=spec.priority)
+        self.log.emit(self._now, Ev.CREATE, path, high=spec.high,
+                      max=spec.max)
+        return idx
+
+    def rmdir(self, path: str, transfer_residual: bool) -> int:
+        residual = self.table.usage(path)
+        parent = parent_path(path)
+        self.table.remove(path)          # uncharges residual from the chain
+        if transfer_residual and residual and parent is not None:
+            self.charge_unchecked(parent, residual)
+        self.log.emit(self._now, Ev.REMOVE, path)
+        return residual
+
+    def exists(self, path: str) -> bool:
+        return path in self.table.index
+
+    def paths(self) -> list[str]:
+        return list(self.table.index)
+
+    def handle(self, path: str) -> int:
+        return self.table.index[path]
+
+    def path_of(self, handle: int) -> str:
+        for p, i in self.table.index.items():
+            if i == handle:
+                return p
+        raise KeyError(handle)
+
+    # charging (host-driven path)
+    def try_charge(self, path: str, pages: int,
+                   step: Optional[int]) -> ChargeTicket:
+        import jax.numpy as jnp
+        from repro.core import controller as C
+        if step is None:
+            # honor the facade clock so earlier throttles expire
+            step = int(self._now)
+        idx = self.table.index[path]
+        st, granted, stalled = C.charge_batch(
+            self.table.state, jnp.array([idx], jnp.int32),
+            jnp.array([pages], jnp.int32), step, self.table.cfg)
+        self.table.state = st
+        return ChargeTicket(granted=bool(granted[0]),
+                            stalled=bool(stalled[0]))
+
+    def uncharge(self, path: str, pages: int) -> None:
+        import jax.numpy as jnp
+        from repro.core import controller as C
+        idx = self.table.index[path]
+        self.table.state = C.uncharge_batch(
+            self.table.state, jnp.array([idx], jnp.int32),
+            jnp.array([pages], jnp.int32))
+
+    def charge_unchecked(self, path: str, pages: int) -> None:
+        from repro.core import controller as C
+        self.table.state = C.host_charge(self.table.state,
+                                         self.table.index[path], pages)
+
+    # subtree control
+    def _subtree(self, path: str) -> list[str]:
+        return [p for p in self.table.index
+                if p == path or p.startswith(path.rstrip("/") + "/")]
+
+    def freeze(self, path: str) -> None:
+        for p in self._subtree(path):
+            self.table.set_frozen(p, True)
+        self.log.emit(self._now, Ev.FREEZE, path)
+
+    def thaw(self, path: str) -> None:
+        for p in self._subtree(path):
+            self.table.set_frozen(p, False)
+        self.log.emit(self._now, Ev.THAW, path)
+
+    def kill(self, path: str) -> int:
+        """Atomic subtree kill: release the subtree root's hierarchical
+        usage from its chain, then retire every node in place.  Mirrors
+        the host semantics: killed domains stay registered (``exists``
+        is True) and deny further charges — here via the frozen flag,
+        the device state's only in-step deny bit."""
+        freed = self.table.usage(path)
+        if freed:
+            self.uncharge(path, freed)
+        for p in self._subtree(path):
+            idx = self.table.index[p]
+            st = self.table.state
+            self.table.state = dict(
+                st,
+                usage=st["usage"].at[idx].set(0),
+                active=st["active"].at[idx].set(False),
+                frozen=st["frozen"].at[idx].set(True))
+        self.log.emit(self._now, Ev.OOM_KILL, path, freed=freed)
+        return freed
+
+    # control files
+    _FILE_KEY = {"memory.current": "usage", "memory.peak": "peak",
+                 "memory.high": "high", "memory.max": "max",
+                 "memory.low": "low", "memory.priority": "priority",
+                 "cgroup.freeze": "frozen"}
+
+    def read(self, path: str, file: str):
+        if file == "memory.events":
+            # device counters live in-step; only throttle state is
+            # observable host-side
+            st = self.table.state
+            idx = self.table.index[path]
+            return {"high": 0, "max": 0,
+                    "throttle": int(int(st["throttle_until"][idx]) > 0),
+                    "oom_kill": 0}
+        idx = self.table.index[path]
+        return int(self.table.state[self._FILE_KEY[file]][idx])
+
+    def write(self, path: str, file: str, value) -> None:
+        if file == "cgroup.freeze":
+            (self.freeze if int(value) else self.thaw)(path)
+            return
+        idx = self.table.index[path]
+        key = self._FILE_KEY[file]
+        st = self.table.state
+        self.table.state = dict(
+            st, **{key: st[key].at[idx].set(int(value))})
+
+    def snapshot(self) -> dict:
+        st = self.table.state
+        return {"paths": list(self.table.index),
+                "index": dict(self.table.index),
+                "usage": np.asarray(st["usage"]),
+                "high": np.asarray(st["high"]),
+                "max": np.asarray(st["max"]),
+                "parent": np.asarray(st["parent"]),
+                "active": np.asarray(st["active"]),
+                "throttle_until": np.asarray(st["throttle_until"])}
+
+    def set_time(self, t: float) -> None:
+        self._now = t
+
+
+# ----------------------------------------------------------- intent channel
+
+
+@dataclass
+class Lease:
+    """A declared tool-call scope: an ephemeral child domain whose
+    ``memory.high`` came from the upward intent hint.  Closing the lease
+    removes the domain and moves retained pages up to the parent
+    (retry/context accumulation — the paper's residual-transfer rule)."""
+    channel: "IntentChannel"
+    tool_id: str
+    path: str
+    parent: str
+    hint: Optional[Hint]
+    high: int
+    closed: bool = False
+
+    def feedback(self, reason: str, peak: Optional[int] = None,
+                 limit: Optional[int] = None) -> Feedback:
+        return self.channel.feedback(self.path, reason, peak=peak,
+                                     limit=limit)
+
+    def close(self, *, transfer_residual: bool = True) -> int:
+        """rmdir the tool domain; returns the residual moved upward.
+
+        The residual transfer is bookkeeping (``charge_unchecked``) —
+        the pages are already resident, so unlike a fresh ``try_charge``
+        it is never denied and counts no breach events.  The DONE event
+        (with ``memory.peak``) lands in the backend's log; on the
+        device backend that read costs one host sync, at lifecycle
+        rate, not step rate."""
+        if self.closed:
+            return 0
+        self.closed = True
+        cg = self.channel.cg
+        if not cg.exists(self.path):
+            return 0
+        cg.log.emit(cg.now, Ev.DONE, self.path,
+                    peak=cg.read(self.path, "memory.peak"))
+        return cg.rmdir(self.path, transfer_residual=transfer_residual)
+
+
+class IntentChannel:
+    """Bidirectional intent coordination bound to one ``AgentCgroup``.
+
+    Upward: ``declare(tool_id, hint)`` opens a per-tool-call child
+    domain whose ``memory.high`` derives from the hint (mis-declared
+    calls throttle early instead of starving siblings).  Downward:
+    ``feedback`` emits the structured record an adaptive agent uses to
+    reconstruct its strategy.
+    """
+
+    def __init__(self, cg: "AgentCgroup"):
+        self.cg = cg
+        self.n_declared = 0
+        self.n_feedbacks = 0
+
+    def declare(self, tool_id: str, hint: Optional[Hint] = None, *,
+                parent: str = "/", priority: int = D.NORMAL,
+                high: Optional[int] = None) -> Lease:
+        if high is None:
+            high = hint_to_high(hint)
+        path = f"{parent.rstrip('/')}/{tool_id}"
+        self.cg.mkdir(path, DomainSpec(high=high, priority=priority))
+        self.n_declared += 1
+        return Lease(self, tool_id, path, parent, hint, high)
+
+    def feedback(self, path: str, reason: str, *, peak: Optional[int] = None,
+                 limit: Optional[int] = None) -> Feedback:
+        if peak is None and self.cg.exists(path):
+            peak = self.cg.read(path, "memory.peak")
+        if limit is None and self.cg.exists(path):
+            limit = self.cg.read(path, "memory.high")
+            if limit >= UNLIMITED:
+                limit = self.cg.read(path, "memory.max")
+        fb = make_feedback(path, reason, peak or 0, limit or 0)
+        self.n_feedbacks += 1
+        self.cg.log.emit(self.cg.now, Ev.FEEDBACK, path, reason=reason)
+        return fb
+
+
+# -------------------------------------------------------------------- facade
+
+
+class AgentCgroup:
+    """The unified control plane: cgroupfs-style files + intent channel
+    over a pluggable enforcement backend."""
+
+    def __init__(self, backend: Backend):
+        self.backend = backend
+        self.intent = IntentChannel(self)
+        self._now = 0.0
+
+    # ------------------------------------------------------------ lifecycle
+
+    def mkdir(self, path: str, spec: Optional[DomainSpec] = None, **kw) -> int:
+        """Create a domain; returns the backend handle (slot index)."""
+        assert path.startswith("/") and path != "/", path
+        spec = spec if spec is not None else DomainSpec(**kw)
+        parent = parent_path(path)
+        if not self.backend.exists(parent):
+            raise FileNotFoundError(f"parent {parent!r} of {path!r}")
+        return self.backend.mkdir(path, spec)
+
+    def rmdir(self, path: str, *, transfer_residual: bool = True) -> int:
+        """Remove a leaf domain.  By default residual charges transfer
+        to the parent (pages outliving the tool call stay accounted to
+        the session); with ``transfer_residual=False`` they release."""
+        return self.backend.rmdir(path, transfer_residual)
+
+    def exists(self, path: str) -> bool:
+        return self.backend.exists(path)
+
+    def paths(self) -> list[str]:
+        return self.backend.paths()
+
+    def handle(self, path: str) -> int:
+        return self.backend.handle(path)
+
+    def path_of(self, handle: int) -> str:
+        return self.backend.path_of(handle)
+
+    # --------------------------------------------------------- control files
+
+    def read(self, path: str, file: str):
+        assert file in _READ_FILES, file
+        return self.backend.read(path, file)
+
+    def write(self, path: str, file: str, value) -> None:
+        assert file in _WRITE_FILES, file
+        self.backend.write(path, file, value)
+
+    # -------------------------------------------------------------- charging
+
+    def try_charge(self, path: Union[str, int], pages: int,
+                   step: Optional[int] = None) -> ChargeTicket:
+        """Hierarchical memcg charge.  ``step`` is the device backend's
+        throttle clock; when omitted it falls back to the facade clock
+        (``set_time``), so host-driven throttles expire with time."""
+        if isinstance(path, int):
+            path = self.path_of(path)
+        return self.backend.try_charge(path, pages, step)
+
+    def uncharge(self, path: Union[str, int], pages: int) -> None:
+        if isinstance(path, int):
+            path = self.path_of(path)
+        self.backend.uncharge(path, pages)
+
+    def charge_unchecked(self, path: Union[str, int], pages: int) -> None:
+        """Lifecycle bookkeeping charge (residual transfer, thaw
+        re-charge): the pages are already resident, never denied."""
+        if isinstance(path, int):
+            path = self.path_of(path)
+        self.backend.charge_unchecked(path, pages)
+
+    # ------------------------------------------------------ subtree control
+
+    def freeze(self, path: str) -> None:
+        self.backend.freeze(path)
+
+    def thaw(self, path: str) -> None:
+        self.backend.thaw(path)
+
+    def kill(self, path: str) -> int:
+        return self.backend.kill(path)
+
+    # -------------------------------------------------------------- queries
+
+    def usage(self, path: str = "/") -> int:
+        return int(self.read(path, "memory.current"))
+
+    def peak(self, path: str = "/") -> int:
+        return int(self.read(path, "memory.peak"))
+
+    @property
+    def capacity(self) -> int:
+        return int(self.read("/", "memory.max"))
+
+    def free(self) -> int:
+        return self.capacity - self.usage("/")
+
+    def throttle_delay_ms(self, path: str, **kw) -> float:
+        fn = getattr(self.backend, "throttle_delay_ms", None)
+        if fn is None:
+            raise NotImplementedError(
+                "device throttling is computed in-step; use device_view()")
+        return fn(path, **kw)
+
+    def snapshot(self) -> dict:
+        """Telemetry arrays for host-side daemons (one device sync).
+
+        Row order is backend-specific: the device backend's rows are
+        addressable by ``handle()`` (the slot index); for
+        backend-agnostic lookup use ``snapshot()['index'][path]``.
+        """
+        return self.backend.snapshot()
+
+    # ----------------------------------------------------------- device path
+
+    def device_view(self) -> DeviceView:
+        fn = getattr(self.backend, "device_view", None)
+        if fn is None:
+            raise NotImplementedError(
+                f"{type(self.backend).__name__} has no device state")
+        return fn()
+
+    def commit_device(self, state: dict) -> None:
+        self.device_view().commit(state)
+
+    # ------------------------------------------------------------------ misc
+
+    @property
+    def log(self) -> EventLog:
+        return self.backend.log
+
+    @property
+    def now(self) -> float:
+        return self._now
+
+    def set_time(self, t: float) -> None:
+        self._now = t
+        self.backend.set_time(t)
+
+    @staticmethod
+    def ancestors(path: str) -> list[str]:
+        return ancestor_paths(path)

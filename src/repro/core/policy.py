@@ -18,22 +18,22 @@ One class per row of the paper's Table 2, plus AgentCgroup itself:
     throttle -> freeze -> feedback-retry (downward), kill only as last
     resort.
 
-Policies operate on a ``DomainTree`` owned by the simulator; the
+Policies drive the unified ``AgentCgroup`` control plane owned by the
+simulator (``sim.cg`` — ``core/cgroup.py``), never a raw tree; the
 simulator provides the allocation-latency physics (reclaim costs) and
 calls back on tool-span boundaries and ticks.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np
 
 from repro.core import domains as D
-from repro.core.events import Ev
+from repro.core.cgroup import DomainSpec
 from repro.core.intent import (AdaptiveAgentModel, CATEGORY_HINT, Feedback,
-                               hint_to_high, make_feedback)
+                               hint_to_high)
 
 
 @dataclass
@@ -52,7 +52,7 @@ class BasePolicy:
 
     def setup(self, sim, tasks) -> None:
         for t in tasks:
-            sim.tree.create(self.domain_for(t), priority=t.priority)
+            sim.cg.mkdir(self.domain_for(t), DomainSpec(priority=t.priority))
 
     def domain_for(self, task) -> str:
         return f"/{task.key}"
@@ -70,16 +70,16 @@ class BasePolicy:
         raise NotImplementedError
 
     def on_release(self, sim, task, mb: int) -> None:
-        sim.tree.uncharge(self.charge_path(sim, task), mb)
+        sim.cg.uncharge(self.charge_path(sim, task), mb)
 
     def tick(self, sim) -> None:
         pass
 
     def on_task_end(self, sim, task) -> None:
         path = self.domain_for(task)
-        d = sim.tree.get(path)
-        if d.usage:
-            sim.tree.uncharge(path, d.usage)
+        usage = sim.cg.usage(path)
+        if usage:
+            sim.cg.uncharge(path, usage)
 
     # admission control: how many tasks fit concurrently (for the
     # mismatch benchmark's concurrency-density comparison)
@@ -98,14 +98,14 @@ class NoIsolationPolicy(BasePolicy):
         self.oom_after_ms = oom_after_ms
 
     def on_alloc(self, sim, task, mb: int) -> AllocOutcome:
-        res = sim.tree.try_charge(self.charge_path(sim, task), mb)
-        if res.ok:
+        ticket = sim.cg.try_charge(self.charge_path(sim, task), mb)
+        if ticket.granted:
             return AllocOutcome(True)
         # pool exhausted: stall; the kernel OOMs the largest consumer
         # once the stall exceeds its patience
         if sim.stall_ms(task) > self.oom_after_ms:
             victim = max(sim.running_tasks(),
-                         key=lambda t: sim.tree.get(self.domain_for(t)).usage)
+                         key=lambda t: sim.cg.usage(self.domain_for(t)))
             sim.kill_task(victim, reason="global_oom")
             return AllocOutcome(False)
         return AllocOutcome(False)
@@ -120,14 +120,14 @@ class StaticLimitPolicy(BasePolicy):
 
     def setup(self, sim, tasks) -> None:
         for t in tasks:
-            sim.tree.create(self.domain_for(t), max=self.limit_mb,
-                            priority=t.priority)
+            sim.cg.mkdir(self.domain_for(t),
+                         DomainSpec(max=self.limit_mb, priority=t.priority))
 
     def on_alloc(self, sim, task, mb: int) -> AllocOutcome:
-        res = sim.tree.try_charge(self.charge_path(sim, task), mb)
-        if res.ok:
+        ticket = sim.cg.try_charge(self.charge_path(sim, task), mb)
+        if ticket.granted:
             return AllocOutcome(True)
-        if res.blocked_by == self.domain_for(task):
+        if ticket.blocked_by == self.domain_for(task):
             # the container's own memory.max: immediate OOM kill
             sim.kill_task(task, reason="memory.max")
             return AllocOutcome(False, kill=True)
@@ -150,8 +150,8 @@ class ReactivePSIPolicy(BasePolicy):
         self._pending_kill_at: Optional[float] = None
 
     def on_alloc(self, sim, task, mb: int) -> AllocOutcome:
-        res = sim.tree.try_charge(self.charge_path(sim, task), mb)
-        return AllocOutcome(res.ok)
+        ticket = sim.cg.try_charge(self.charge_path(sim, task), mb)
+        return AllocOutcome(ticket.granted)
 
     def tick(self, sim) -> None:
         now = sim.now_ms
@@ -160,7 +160,7 @@ class ReactivePSIPolicy(BasePolicy):
             lows = [t for t in sim.running_tasks() if t.priority == D.LOW]
             if lows:
                 victim = max(lows,
-                             key=lambda t: sim.tree.get(self.domain_for(t)).usage)
+                             key=lambda t: sim.cg.usage(self.domain_for(t)))
                 sim.kill_task(victim, reason="oomd_psi")
         if now - self._last_poll < self.poll_ms:
             return
@@ -189,13 +189,14 @@ class PredictiveP95Policy(StaticLimitPolicy):
             lim = (int(np.percentile(hist, 95) * self.safety)
                    if hist else self.default_mb)
             self.limits[t.key] = lim
-            sim.tree.create(self.domain_for(t), max=lim, priority=t.priority)
+            sim.cg.mkdir(self.domain_for(t),
+                         DomainSpec(max=lim, priority=t.priority))
 
     def on_alloc(self, sim, task, mb: int) -> AllocOutcome:
-        res = sim.tree.try_charge(self.charge_path(sim, task), mb)
-        if res.ok:
+        ticket = sim.cg.try_charge(self.charge_path(sim, task), mb)
+        if ticket.granted:
             return AllocOutcome(True)
-        if res.blocked_by == self.domain_for(task):
+        if ticket.blocked_by == self.domain_for(task):
             sim.kill_task(task, reason="predicted_limit")
             return AllocOutcome(False, kill=True)
         return AllocOutcome(False)
@@ -206,7 +207,9 @@ class PredictiveP95Policy(StaticLimitPolicy):
 
 class AgentCgroupPolicy(BasePolicy):
     """The paper's system (§5): hierarchical tool-call domains, intent
-    hints, graduated throttle -> freeze -> feedback, kill last."""
+    hints, graduated in-kernel enforcement throttle -> freeze ->
+    feedback, kill last.  Tool-call domains open and close through the
+    control plane's ``IntentChannel`` leases."""
     name = "agentcgroup"
     hierarchical = True
 
@@ -224,7 +227,7 @@ class AgentCgroupPolicy(BasePolicy):
         self.thaw_threshold = thaw_threshold
         self.hard_patience_ms = hard_patience_ms
         self.agent_model = agent_model or AdaptiveAgentModel()
-        self._tool_domain: dict[str, str] = {}
+        self._lease: dict = {}          # task.key -> open tool Lease
         self._tool_seq = 0
 
     def setup(self, sim, tasks) -> None:
@@ -236,83 +239,78 @@ class AgentCgroupPolicy(BasePolicy):
             if t.priority == D.HIGH:
                 # below_low protection for the latency-sensitive session
                 low = int(t.trace.peak_mb * 1.05)
-            sim.tree.create(self.domain_for(t), high=high, low=low,
-                            priority=t.priority)
+            sim.cg.mkdir(self.domain_for(t),
+                         DomainSpec(high=high, low=low, priority=t.priority))
 
     # --- fine-grained domains at tool-call boundaries (bash-wrapper analogue)
 
     def on_tool_start(self, sim, task, call) -> None:
         self._tool_seq += 1
-        path = f"{self.domain_for(task)}/tool_{self._tool_seq}"
         hint = None
         if self.use_intent:
             declared = CATEGORY_HINT.get(call.category)
             hint = self.agent_model.hint_for(call.category, declared)
-        high = hint_to_high(hint)
-        sim.tree.create(path, high=high, priority=task.priority)
-        self._tool_domain[task.key] = path
+        self._lease[task.key] = sim.cg.intent.declare(
+            f"tool_{self._tool_seq}", hint, parent=self.domain_for(task),
+            priority=task.priority, high=hint_to_high(hint))
 
     def on_tool_end(self, sim, task, call) -> None:
-        path = self._tool_domain.pop(task.key, None)
-        if path and sim.tree.exists(path):
-            d = sim.tree.get(path)
-            # per-tool-call metrics (memory.peak) feed the event log
-            sim.tree.log.emit(sim.now_ms, Ev.DONE, path, peak=d.peak)
-            # retained memory moves up to the session (retry accumulation)
-            residual = d.usage
-            sim.tree.remove(path)          # uncharges residual from chain
-            if residual:
-                sim.tree.try_charge(self.domain_for(task), residual)
+        lease = self._lease.pop(task.key, None)
+        if lease is not None:
+            # lease close logs memory.peak and moves retained memory up
+            # to the session (retry accumulation)
+            lease.close()
 
     def charge_path(self, sim, task) -> str:
-        return self._tool_domain.get(task.key, self.domain_for(task))
+        lease = self._lease.get(task.key)
+        return lease.path if lease is not None else self.domain_for(task)
 
     def on_release(self, sim, task, mb: int) -> None:
         path = self.charge_path(sim, task)
-        d = sim.tree.get(path)
-        take = min(mb, d.usage)
+        take = min(mb, sim.cg.usage(path))
         if take:
-            sim.tree.uncharge(path, take)
+            sim.cg.uncharge(path, take)
         rest = mb - take
         if rest > 0 and path != self.domain_for(task):
-            sim.tree.uncharge(self.domain_for(task), rest)
+            sim.cg.uncharge(self.domain_for(task), rest)
 
     # --- graduated in-kernel enforcement
 
     def on_alloc(self, sim, task, mb: int) -> AllocOutcome:
         path = self.charge_path(sim, task)
-        res = sim.tree.try_charge(path, mb)
-        if res.ok:
+        ticket = sim.cg.try_charge(path, mb)
+        if ticket.granted:
             delay = 0.0
-            if res.over_high:
-                delay = sim.tree.throttle_delay_ms(
+            if ticket.over_high:
+                delay = sim.cg.throttle_delay_ms(
                     path, base_delay_ms=self.base_delay_ms,
                     max_delay_ms=self.max_delay_ms)
             # below_low protection: the HIGH session's allocations skip
             # direct reclaim — sibling throttling did the work already
-            sess = sim.tree.get(self.domain_for(task))
-            protected = (task.priority == D.HIGH and sess.usage <= sess.low)
+            sess = self.domain_for(task)
+            protected = (task.priority == D.HIGH
+                         and sim.cg.usage(sess)
+                         <= sim.cg.read(sess, "memory.low"))
             return AllocOutcome(True, delay_ms=delay, protected=protected)
         # hard denial: stall; after patience, feedback-retry (strategy
         # reconstruction) instead of killing
         if sim.stall_ms(task) > self.hard_patience_ms:
-            d = sim.tree.get(path)
-            fb = make_feedback(path, "oom", d.peak, d.max)
-            sim.tree.log.emit(sim.now_ms, Ev.FEEDBACK, path, reason="oom")
+            fb = sim.cg.intent.feedback(
+                path, "oom", peak=sim.cg.peak(path),
+                limit=sim.cg.read(path, "memory.max"))
             return AllocOutcome(False, feedback=fb)
         return AllocOutcome(False)
 
     # --- daemon: freeze under extreme pressure, thaw when it clears
 
     def tick(self, sim) -> None:
-        tree = sim.tree
-        usage, cap = tree.root.usage, tree.root.max
+        usage, cap = sim.cg.usage("/"), sim.cg.capacity
         frozen = sim.frozen_tasks()
         if usage > self.freeze_threshold * cap:
             cands = [t for t in sim.running_tasks() if t.priority == D.LOW]
             if cands:
                 victim = max(cands,
-                             key=lambda t: tree.get(self.domain_for(t)).usage)
+                             key=lambda t: sim.cg.usage(self.domain_for(t)))
                 sim.freeze_task(victim)
         elif frozen:
             # thaw only when the re-charge will not immediately push the

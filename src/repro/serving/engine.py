@@ -5,10 +5,11 @@ chunked prefill: prompt/tool-result tokens are force-fed one per step,
 so *every* context-page allocation flows through the same charge path a
 decoded token uses).  The resource controller runs in one of two modes:
 
-  * ``inkernel``  — the AgentCgroup design: ``charge_batch`` executes
-    INSIDE the jitted step; a slot whose page charge is denied (hard
-    limit, freeze, throttle) simply does not advance *this same step*.
-    Microsecond-class reaction, no host round trip.
+  * ``inkernel``  — the AgentCgroup design: the control plane's
+    ``device_view().charge`` executes INSIDE the jitted step; a slot
+    whose page charge is denied (hard limit, freeze, throttle) simply
+    does not advance *this same step*.  Microsecond-class reaction, no
+    host round trip.
   * ``userspace`` — the baseline the paper's §4.2 criticizes: the daemon
     observes usage with a poll interval + reaction latency and gates
     slots one-or-more steps late; bursts land before control does (the
@@ -32,10 +33,11 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import domains as D
-from repro.core.controller import (ControllerConfig, DeviceDomainTable,
-                                   charge_batch, host_charge, uncharge_batch)
+from repro.core.cgroup import (AgentCgroup, DeviceTableBackend, DeviceView,
+                               DomainSpec)
+from repro.core.controller import ControllerConfig
 from repro.core.events import Ev, EventLog
-from repro.core.intent import hint_to_high, make_feedback
+from repro.core.intent import Hint
 from repro.models import model as M
 from repro.perf import PerfConfig, DEFAULT_PERF
 from repro.serving.kvcache import PageAccountant, SlotCaches
@@ -72,22 +74,20 @@ def _gate_shape(gate, x):
     return gate.reshape((1, gate.shape[0]) + (1,) * (x.ndim - 2))
 
 
-def _make_step_fn(cfg: ModelConfig, perf: PerfConfig, ecfg: EngineConfig):
-    ctrl_cfg = ecfg.ctrl
-
+def _make_step_fn(cfg: ModelConfig, perf: PerfConfig, ecfg: EngineConfig,
+                  view: DeviceView):
     @functools.partial(jax.jit, static_argnames=("mode",), donate_argnums=(1, 2))
     def step_fn(params, dstate, ctrl, tokens, lengths, dom, amt, host_gate,
                 step_no, key, *, mode: str):
         if mode == "inkernel":
             # in-step enforcement: charge + gate inside the same program
-            ctrl, granted, stalled = charge_batch(ctrl, dom, amt, step_no,
-                                                  ctrl_cfg)
+            ctrl, granted, stalled = view.charge(ctrl, dom, amt, step_no)
             gate = granted
         else:
             # user-space baseline: the (stale) host gate decides; usage is
             # charged after the fact, so bursts overshoot the budget
             gate = host_gate & (dom >= 0)
-            ctrl = uncharge_batch(ctrl, jnp.where(gate, dom, -1), -amt)
+            ctrl = view.account(ctrl, jnp.where(gate, dom, -1), amt)
             granted, stalled = gate, (dom >= 0) & ~gate
         logits, new_state = M.decode_step(cfg, params, dstate, tokens,
                                           lengths, perf=perf)
@@ -124,9 +124,10 @@ class Engine:
         self.ecfg = ecfg
         self.caches = SlotCaches(cfg, ecfg.max_slots, ecfg.s_max)
         self.accountant = PageAccountant(ecfg.page_tokens)
-        self.table = DeviceDomainTable(ecfg.pool_pages,
-                                       n_domains=4 * ecfg.max_slots + 8,
-                                       cfg=ecfg.ctrl)
+        self.cg = AgentCgroup(DeviceTableBackend(
+            ecfg.pool_pages, n_domains=4 * ecfg.max_slots + 8,
+            cfg=ecfg.ctrl))
+        self._view = self.cg.device_view()
         self.log = EventLog()
         self.metrics = EngineMetrics()
         self.sessions: dict[str, Session] = {}
@@ -134,19 +135,19 @@ class Engine:
         self.slot_session: list[Optional[str]] = [None] * ecfg.max_slots
         self.step_no = 0
         self.key = jax.random.PRNGKey(seed)
-        self._step = _make_step_fn(cfg, perf, ecfg)
+        self._step = _make_step_fn(cfg, perf, ecfg, self._view)
         self._host_gate = np.ones(ecfg.max_slots, bool)
-        self._tool_domain: dict[str, str] = {}
+        self._lease: dict[str, object] = {}      # sid -> open tool Lease
         self._tool_seq = 0
-        self._prev_throttle = np.zeros(self.table.n, np.int64)
+        self._prev_throttle = np.zeros(self.cg.backend.n_domains, np.int64)
 
     # ------------------------------------------------------------ admission
 
     def submit(self, session: Session) -> None:
         self.sessions[session.sid] = session
         tenant_path = f"/{session.tenant}"
-        if tenant_path not in self.table.index:
-            self.table.create(tenant_path)
+        if not self.cg.exists(tenant_path):
+            self.cg.mkdir(tenant_path)
         self.waiting.append(session.sid)
 
     def _try_admit(self) -> None:
@@ -162,8 +163,8 @@ class Engine:
             if s.priority == D.HIGH:
                 low = self.ecfg.pool_pages            # below_low protection
             high = (self.ecfg.session_high or {}).get(s.sid, D.UNLIMITED)
-            s.dom_idx = self.table.create(s.domain, priority=s.priority,
-                                          low=low, high=high)
+            s.dom_idx = self.cg.mkdir(s.domain, DomainSpec(
+                priority=s.priority, low=low, high=high))
             s.t_admit = self.step_no
             self.slot_session[slot] = sid
             s.start()
@@ -178,29 +179,26 @@ class Engine:
         if not self.ecfg.use_tool_domains:
             return
         in_burst = bool(s.feed_queue) and s.length > len(s.prompt)
-        has = s.sid in self._tool_domain
+        has = s.sid in self._lease
         if in_burst and not has:
             self._tool_seq += 1
-            path = f"{s.domain}/tool_{self._tool_seq}"
             high = D.UNLIMITED
+            hint = None
             if self.ecfg.use_intent:
-                from repro.core.intent import Hint
                 table = self.ecfg.intent_high_pages or {
                     Hint.LOW: 4, Hint.MEDIUM: 10, Hint.HIGH: 24}
                 hint = s.declared_hint()
                 high = table.get(hint, table[Hint.MEDIUM])
-            idx = self.table.create(path, high=high, priority=s.priority)
-            self._tool_domain[s.sid] = path
-            s.dom_idx = idx
+            lease = self.cg.intent.declare(f"tool_{self._tool_seq}", hint,
+                                           parent=s.domain,
+                                           priority=s.priority, high=high)
+            self._lease[s.sid] = lease
+            s.dom_idx = self.cg.handle(lease.path)
         elif not in_burst and has:
-            path = self._tool_domain.pop(s.sid)
-            residual = self.table.usage(path)
-            self.table.remove(path)                    # releases chain
-            s.dom_idx = self.table.index[s.domain]
-            if residual:
-                # context pages persist: move the charge to the session
-                self.table.state = host_charge(self.table.state,
-                                               s.dom_idx, residual)
+            # context pages persist: lease close moves the residual
+            # charge up to the session
+            self._lease.pop(s.sid).close()
+            s.dom_idx = self.cg.handle(s.domain)
 
     # -------------------------------------------------------------- daemon
 
@@ -212,16 +210,15 @@ class Engine:
         does; the per-session ``high`` overshoot metric quantifies it."""
         e = self.ecfg
         if self.step_no % e.userspace_poll_steps == 0:
-            usage = np.asarray(self.table.state["usage"])
-            high = np.asarray(self.table.state["high"])
-            maxl = np.asarray(self.table.state["max"])
+            snap = self.cg.snapshot()
+            usage, high, maxl = snap["usage"], snap["high"], snap["max"]
+            parent = snap["parent"]
             decisions = {}
             for slot, sid in enumerate(self.slot_session):
                 if sid is None:
                     continue
                 s = self.sessions[sid]
                 chain = [s.dom_idx]
-                parent = np.asarray(self.table.state["parent"])
                 while parent[chain[-1]] >= 0:
                     chain.append(int(parent[chain[-1]]))
                 over = max((usage[i] - high[i]) / max(high[i], 1)
@@ -252,12 +249,12 @@ class Engine:
 
     def _daemon(self) -> None:
         e = self.ecfg
-        root_usage = int(self.table.state["usage"][0])
+        snap = self.cg.snapshot()
+        root_usage = int(snap["usage"][0])
         self.metrics.root_usage.append(root_usage)
         self.metrics.overshoot_pages = max(
             self.metrics.overshoot_pages, root_usage - e.pool_pages)
-        usage = np.asarray(self.table.state["usage"])
-        high = np.asarray(self.table.state["high"])
+        usage, high = snap["usage"], snap["high"]
         lim = high < D.UNLIMITED
         if lim.any():
             self.metrics.session_overshoot_pages = max(
@@ -283,21 +280,14 @@ class Engine:
         self._try_admit()
 
     def _freeze(self, s: Session) -> None:
-        if s.sid in self._tool_domain:
-            path = self._tool_domain.pop(s.sid)
-            resid = self.table.usage(path)
-            self.table.remove(path)
-            if resid:
-                self.table.state = host_charge(
-                    self.table.state, self.table.index[s.domain], resid)
+        if s.sid in self._lease:
+            self._lease.pop(s.sid).close()     # residual moves to session
         self.caches.freeze_slot(s.sid, s.slot, pages=s.pages,
                                 meta={"length": s.length})
         self.slot_session[s.slot] = None
         # release pages (offloaded to host) + freeze the domain
-        self.table.state = uncharge_batch(
-            self.table.state, jnp.array([self.table.index[s.domain]]),
-            jnp.array([s.pages], jnp.int32))
-        self.table.set_frozen(s.domain, True)
+        self.cg.uncharge(s.domain, s.pages)
+        self.cg.freeze(s.domain)
         s.slot = -1
         s.state = SState.FROZEN
         s.n_freezes += 1
@@ -306,24 +296,20 @@ class Engine:
 
     def _thaw(self, s: Session) -> None:
         slot, meta = self.caches.thaw_slot(s.sid)
-        self.table.set_frozen(s.domain, False)
-        self.table.state = host_charge(
-            self.table.state, self.table.index[s.domain], s.pages)
+        self.cg.thaw(s.domain)
+        self.cg.charge_unchecked(s.domain, s.pages)   # thaw re-charge
         s.slot = slot
-        s.dom_idx = self.table.index[s.domain]
+        s.dom_idx = self.cg.handle(s.domain)
         self.slot_session[slot] = s.sid
         s.state = SState.RUNNING
         self.metrics.n_thaws += 1
         self.log.emit(self.step_no, Ev.THAW, s.domain)
 
     def _finish(self, s: Session) -> None:
-        if s.sid in self._tool_domain:
-            path = self._tool_domain.pop(s.sid)
-            self.table.remove(path)
-        self.table.state = uncharge_batch(
-            self.table.state, jnp.array([self.table.index[s.domain]]),
-            jnp.array([s.pages], jnp.int32))
-        self.table.remove(s.domain)
+        if s.sid in self._lease:
+            self._lease.pop(s.sid).close()
+        self.cg.uncharge(s.domain, s.pages)
+        self.cg.rmdir(s.domain, transfer_residual=False)
         self.caches.free_slot(s.slot)
         self.slot_session[s.slot] = None
         s.slot = -1
@@ -334,12 +320,10 @@ class Engine:
     def _evict(self, s: Session) -> None:
         """Last resort — the paper's triple-penalty path; counted so the
         benchmarks can show how rarely it fires."""
-        if s.sid in self._tool_domain:
-            self.table.remove(self._tool_domain.pop(s.sid))
-        self.table.state = uncharge_batch(
-            self.table.state, jnp.array([self.table.index[s.domain]]),
-            jnp.array([s.pages], jnp.int32))
-        self.table.remove(s.domain)
+        if s.sid in self._lease:
+            self._lease.pop(s.sid).close()
+        self.cg.uncharge(s.domain, s.pages)
+        self.cg.rmdir(s.domain, transfer_residual=False)
         if s.slot >= 0:
             self.caches.free_slot(s.slot)
             self.slot_session[s.slot] = None
@@ -352,6 +336,7 @@ class Engine:
 
     def step(self) -> None:
         e = self.ecfg
+        self.cg.set_time(self.step_no)
         if self.ecfg.mode == "userspace":
             self._userspace_policy()
             self._apply_pending_gate()
@@ -371,17 +356,18 @@ class Engine:
             dom[slot] = s.dom_idx
             amt[slot] = self.accountant.crossing(s.length)
         self.key, sub = jax.random.split(self.key)
-        nxt, self.caches.state, self.table.state, granted, stalled = \
-            self._step(self.params, self.caches.state, self.table.state,
+        nxt, self.caches.state, new_ctrl, granted, stalled = \
+            self._step(self.params, self.caches.state, self._view.state,
                        jnp.asarray(tokens), jnp.asarray(lengths),
                        jnp.asarray(dom), jnp.asarray(amt),
                        jnp.asarray(self._host_gate), self.step_no, sub,
                        mode=("inkernel" if e.mode == "inkernel"
                              else "userspace"))
+        self._view.commit(new_ctrl)
         nxt = np.asarray(nxt)
         granted = np.asarray(granted)
         # throttle-trigger accounting (memcg_bpf_ops delay counter)
-        tu = np.asarray(self.table.state["throttle_until"])
+        tu = np.asarray(self._view.state["throttle_until"])
         self.metrics.throttle_triggers += int(np.sum(tu > self._prev_throttle))
         self._prev_throttle = np.maximum(tu, self._prev_throttle)
 
@@ -413,16 +399,15 @@ class Engine:
                 # analogue) so its pages free and a smaller retry fits
                 if (stall > 0 and stall % e.feedback_patience_steps == 0
                         and s.feed_queue):
-                    fb = make_feedback(s.domain, "throttled", s.pages,
-                                       int(self.table.state["high"][s.dom_idx]))
+                    fb = self.cg.intent.feedback(
+                        s.domain, "throttled", peak=s.pages,
+                        limit=int(self.cg.read(self.cg.path_of(s.dom_idx),
+                                               "memory.high")))
                     if (stall >= 2 * e.feedback_patience_steps
                             and s.burst_start_len >= 0):
                         freed = s.rollback_burst(scale=0.5)
                         if freed:
-                            self.table.state = uncharge_batch(
-                                self.table.state,
-                                jnp.array([s.dom_idx], jnp.int32),
-                                jnp.array([freed], jnp.int32))
+                            self.cg.uncharge(s.dom_idx, freed)
                         s.feedbacks.append(fb)
                         self.log.emit(self.step_no, Ev.FEEDBACK, s.domain,
                                       action="rollback", freed=freed)

@@ -1,4 +1,4 @@
-"""Agent sessions: the serving engine's unit of tenancy.
+r"""Agent sessions: the serving engine's unit of tenancy.
 
 A session models one sandboxed agent: a prompt, then an alternating
 reason/act loop in which each tool call's *result* is appended to the

@@ -20,6 +20,7 @@ from typing import Optional
 
 from repro.core import domains as D
 from repro.core.accounting import Accounting
+from repro.core.cgroup import AgentCgroup, HostTreeBackend
 from repro.core.events import Ev, EventLog
 from repro.core.policy import AllocOutcome, BasePolicy
 from repro.traces.schema import AllocEvent, TaskTrace, ToolCall, to_alloc_events
@@ -128,8 +129,8 @@ class Replay:
         assert len(traces) == len(priorities)
         self.cfg = cfg
         self.policy = policy
-        self.tree = D.DomainTree(cfg.capacity_mb)
-        self.log = self.tree.log
+        self.cg = AgentCgroup(HostTreeBackend(cfg.capacity_mb))
+        self.log = self.cg.log
         self.accounting = Accounting()
         self.now_ms = 0.0
         self.peak_pool = 0
@@ -165,8 +166,8 @@ class Replay:
         if not task.running:
             return
         path = self.policy.domain_for(task)
-        if self.tree.exists(path):
-            self.tree.kill(path)
+        if self.cg.exists(path):
+            self.cg.kill(path)
         task.killed = True
         task.kill_reason = reason
         task.finish_ms = self.now_ms
@@ -183,11 +184,11 @@ class Replay:
         if task.frozen:
             return
         path = self.policy.domain_for(task)
-        d = self.tree.get(path)
-        task.frozen_mb = d.usage
-        if d.usage:
-            self.tree.uncharge(path, d.usage)
-        self.tree.freeze(path)
+        usage = self.cg.usage(path)
+        task.frozen_mb = usage
+        if usage:
+            self.cg.uncharge(path, usage)
+        self.cg.freeze(path)
         task.frozen = True
         task.frozen_since = self.now_ms
 
@@ -196,14 +197,14 @@ class Replay:
         frozen) if the pool cannot host the pages again yet."""
         if not task.frozen:
             return True
-        if task.frozen_mb > self.tree.free():
+        if task.frozen_mb > self.cg.free():
             return False            # no headroom yet; stay frozen quietly
         path = self.policy.domain_for(task)
-        self.tree.thaw(path)
+        self.cg.thaw(path)
         if task.frozen_mb:
-            res = self.tree.try_charge(path, task.frozen_mb)
-            if not res.ok:
-                self.tree.freeze(path)
+            ticket = self.cg.try_charge(path, task.frozen_mb)
+            if not ticket.granted:
+                self.cg.freeze(path)
                 return False
         task.frozen_mb = 0
         task.frozen = False
@@ -221,8 +222,8 @@ class Replay:
         throttling siblings) — the allocation skips direct reclaim, the
         mechanism behind Fig 8(b)'s HIGH-priority latency win."""
         cfg = self.cfg
-        floor_mb = cfg.pressure_floor * self.tree.root.max
-        deficit = self.tree.root.usage - floor_mb
+        floor_mb = cfg.pressure_floor * self.cg.capacity
+        deficit = self.cg.usage("/") - floor_mb
         lat = cfg.base_alloc_ms
         if deficit > 0:
             scale = cfg.protection_discount if protected else 1.0
@@ -320,7 +321,7 @@ class Replay:
         cfg = self.cfg
         while any(t.running for t in self.tasks) and self.now_ms < cfg.max_sim_ms:
             self.now_ms += cfg.tick_ms
-            self.tree.now_ms = self.now_ms
+            self.cg.set_time(self.now_ms)
             for task in self.tasks:
                 if not task.running or task.frozen:
                     continue
@@ -340,7 +341,7 @@ class Replay:
                     task.finish_ms = self.now_ms
                     self.policy.on_task_end(self, task)
                     self.log.emit(self.now_ms, Ev.DONE, task.key)
-            self.peak_pool = max(self.peak_pool, self.tree.root.usage)
+            self.peak_pool = max(self.peak_pool, self.cg.usage("/"))
             self.policy.tick(self)
         results = {
             t.key: TaskResult(completed=t.done, killed=t.killed,

@@ -1,0 +1,241 @@
+"""The unified cgroupfs-style control plane (core/cgroup.py).
+
+Host/device backend parity is the point of the facade: one op sequence,
+two enforcement substrates, identical usage/peak/grant results.  Also
+covers the control-file surface, the intent channel's lease lifecycle
+(residual transfer on rmdir), and freeze->thaw re-charge parity.
+"""
+import pytest
+
+from repro.core import domains as D
+from repro.core.cgroup import (AgentCgroup, ChargeTicket, DeviceTableBackend,
+                               DomainSpec, HostTreeBackend, ancestor_paths,
+                               parent_path)
+from repro.core.controller import ControllerConfig
+from repro.core.intent import Hint
+
+NO_THROTTLE = ControllerConfig(base_delay_ms=0.0, max_delay_ms=0.0)
+BACKENDS = ["host", "device"]
+
+
+def mk_cg(kind: str, cap: int = 500) -> AgentCgroup:
+    if kind == "host":
+        return AgentCgroup(HostTreeBackend(cap))
+    return AgentCgroup(DeviceTableBackend(cap, n_domains=16,
+                                          cfg=NO_THROTTLE))
+
+
+def std_tree(cg: AgentCgroup) -> AgentCgroup:
+    cg.mkdir("/t")
+    cg.mkdir("/t/a", DomainSpec(high=120))
+    cg.mkdir("/t/b", DomainSpec(max=200, priority=D.LOW))
+    cg.mkdir("/t/a/tool", DomainSpec(high=40))
+    return cg
+
+
+# one op sequence exercising charge/deny, uncharge, freeze/thaw,
+# rmdir-with-residual, and unchecked lifecycle charges
+OPS = [
+    ("charge", "/t/a/tool", 60),      # grant; over tool high
+    ("charge", "/t/b", 150),          # grant
+    ("charge", "/t/b", 100),          # deny: /t/b max=200
+    ("uncharge", "/t/b", 50),
+    ("charge", "/t/b", 100),          # grant now
+    ("freeze", "/t/a", 0),
+    ("charge", "/t/a/tool", 5),       # deny: frozen ancestor
+    ("thaw", "/t/a", 0),
+    ("charge", "/t/a/tool", 5),       # grant again
+    ("rmdir", "/t/a/tool", 0),        # residual 65 transfers to /t/a
+    ("unchecked", "/t/a", 20),        # lifecycle bookkeeping charge
+    ("uncharge", "/t/a", 30),
+    ("charge", "/t/a", 400),          # deny: root capacity 500
+]
+
+# expected state after OPS — identical for BOTH backends by construction
+EXPECTED_GRANTS = [True, True, False, True, False, True, False]
+EXPECTED = {"/": 255, "/t": 255, "/t/a": 55, "/t/b": 200}
+EXPECTED_PEAK = {"/": 285, "/t": 285, "/t/a": 85, "/t/b": 200}
+
+
+def run_ops(cg: AgentCgroup):
+    grants = []
+    for step, (op, path, amt) in enumerate(OPS):
+        if op == "charge":
+            grants.append(cg.try_charge(path, amt, step=step).granted)
+        elif op == "uncharge":
+            cg.uncharge(path, amt)
+        elif op == "unchecked":
+            cg.charge_unchecked(path, amt)
+        elif op == "freeze":
+            cg.freeze(path)
+        elif op == "thaw":
+            cg.thaw(path)
+        elif op == "rmdir":
+            cg.rmdir(path)
+    return grants
+
+
+@pytest.mark.parametrize("kind", BACKENDS)
+def test_same_op_sequence_same_results(kind):
+    """THE acceptance loop: one op sequence via AgentCgroup against each
+    backend; grants, usage, and peak must all match the shared golden
+    values (hence each other)."""
+    cg = std_tree(mk_cg(kind))
+    assert run_ops(cg) == EXPECTED_GRANTS
+    for path, want in EXPECTED.items():
+        assert cg.usage(path) == want, (kind, path)
+    for path, want in EXPECTED_PEAK.items():
+        assert cg.peak(path) == want, (kind, path)
+
+
+def test_backends_agree_directly():
+    host, dev = std_tree(mk_cg("host")), std_tree(mk_cg("device"))
+    assert run_ops(host) == run_ops(dev)
+    for path in ["/", "/t", "/t/a", "/t/b"]:
+        assert host.usage(path) == dev.usage(path)
+        assert host.peak(path) == dev.peak(path)
+
+
+# ------------------------------------------------------- lifecycle parity
+
+
+@pytest.mark.parametrize("kind", BACKENDS)
+def test_rmdir_residual_transfers_to_ancestors(kind):
+    """Closing a non-empty tool domain keeps its retained pages
+    accounted to the session chain (the residual-transfer rule)."""
+    cg = mk_cg(kind)
+    cg.mkdir("/s")
+    cg.mkdir("/s/tool", DomainSpec(high=40))
+    assert cg.try_charge("/s/tool", 30).granted
+    residual = cg.rmdir("/s/tool")
+    assert residual == 30
+    assert not cg.exists("/s/tool")
+    assert cg.usage("/s") == 30 and cg.usage("/") == 30
+
+
+@pytest.mark.parametrize("kind", BACKENDS)
+def test_rmdir_without_transfer_releases(kind):
+    cg = mk_cg(kind)
+    cg.mkdir("/s")
+    cg.mkdir("/s/tool")
+    cg.try_charge("/s/tool", 30)
+    cg.rmdir("/s/tool", transfer_residual=False)
+    assert cg.usage("/s") == 0 and cg.usage("/") == 0
+
+
+@pytest.mark.parametrize("kind", BACKENDS)
+def test_freeze_thaw_recharge_parity(kind):
+    """The engine's freeze path: offload (uncharge) + freeze, then thaw
+    + unchecked re-charge; ancestor usage must round-trip exactly."""
+    cg = mk_cg(kind)
+    cg.mkdir("/s")
+    cg.mkdir("/s/sess")
+    assert cg.try_charge("/s/sess", 80).granted
+    before = {p: cg.usage(p) for p in ["/", "/s", "/s/sess"]}
+    pages = cg.usage("/s/sess")
+    cg.uncharge("/s/sess", pages)
+    cg.freeze("/s/sess")
+    assert not cg.try_charge("/s/sess", 1).granted
+    assert cg.usage("/") == 0
+    cg.thaw("/s/sess")
+    cg.charge_unchecked("/s/sess", pages)
+    after = {p: cg.usage(p) for p in ["/", "/s", "/s/sess"]}
+    assert after == before
+
+
+@pytest.mark.parametrize("kind", BACKENDS)
+def test_kill_releases_subtree(kind):
+    cg = mk_cg(kind)
+    cg.mkdir("/s")
+    cg.mkdir("/s/a")
+    cg.try_charge("/s/a", 40)
+    cg.try_charge("/s", 10)
+    freed = cg.kill("/s")
+    assert freed == 50
+    assert cg.usage("/") == 0
+    # killed domains stay registered and deny further charges — on
+    # both backends
+    assert cg.exists("/s") and cg.exists("/s/a")
+    assert not cg.try_charge("/s", 5).granted
+    assert not cg.try_charge("/s/a", 5).granted
+
+
+def test_host_driven_throttle_expires_with_facade_clock():
+    """A device-backend charge with no explicit step uses the facade
+    clock, so an over-``high`` throttle expires instead of pinning all
+    later host-driven charges at step 0."""
+    cg = AgentCgroup(DeviceTableBackend(500, n_domains=8,
+                                        cfg=ControllerConfig()))
+    cg.mkdir("/s", DomainSpec(high=10))
+    assert cg.try_charge("/s", 20).granted       # over high -> throttled
+    assert not cg.try_charge("/s", 1).granted    # still step 0: denied
+    cg.set_time(10_000)
+    assert cg.try_charge("/s", 1).granted        # throttle expired
+
+
+# ------------------------------------------------------------ control files
+
+
+@pytest.mark.parametrize("kind", BACKENDS)
+def test_read_write_files(kind):
+    cg = mk_cg(kind)
+    cg.mkdir("/s", DomainSpec(high=100, max=200, low=10, priority=D.HIGH))
+    assert cg.read("/s", "memory.high") == 100
+    assert cg.read("/s", "memory.max") == 200
+    assert cg.read("/s", "memory.low") == 10
+    assert cg.read("/s", "memory.priority") == D.HIGH
+    cg.write("/s", "memory.high", 50)
+    assert cg.read("/s", "memory.high") == 50
+    cg.write("/s", "cgroup.freeze", 1)
+    assert cg.read("/s", "cgroup.freeze") == 1
+    assert not cg.try_charge("/s", 1).granted
+    cg.write("/s", "cgroup.freeze", 0)
+    assert cg.try_charge("/s", 1).granted
+    with pytest.raises(AssertionError):
+        cg.read("/s", "not.a.file")
+    with pytest.raises(AssertionError):
+        cg.write("/s", "memory.current", 3)      # read-only
+
+
+def test_host_event_counters():
+    cg = mk_cg("host")
+    cg.mkdir("/s", DomainSpec(high=10, max=50))
+    cg.try_charge("/s", 20)                      # high breach
+    cg.try_charge("/s", 100)                     # max breach
+    ev = cg.read("/s", "memory.events")
+    assert ev["high"] == 1 and ev["max"] == 1
+
+
+@pytest.mark.parametrize("kind", BACKENDS)
+def test_mkdir_requires_parent(kind):
+    cg = mk_cg(kind)
+    with pytest.raises(FileNotFoundError):
+        cg.mkdir("/nope/child")
+
+
+# ------------------------------------------------------------ intent channel
+
+
+@pytest.mark.parametrize("kind", BACKENDS)
+def test_intent_lease_lifecycle(kind):
+    cg = mk_cg(kind)
+    cg.mkdir("/sess")
+    lease = cg.intent.declare("tool_1", Hint.LOW, parent="/sess")
+    assert cg.exists("/sess/tool_1")
+    # hint mapped to a memory.high on the tool domain
+    assert cg.read(lease.path, "memory.high") < D.UNLIMITED
+    cg.try_charge(lease.path, 25)
+    fb = lease.feedback("throttled")
+    assert fb.reason == "throttled" and fb.peak_pages == 25
+    resid = lease.close()
+    assert resid == 25 and not cg.exists(lease.path)
+    assert cg.usage("/sess") == 25               # residual moved up
+    assert lease.close() == 0                    # idempotent
+    assert cg.intent.n_declared == 1 and cg.intent.n_feedbacks == 1
+
+
+def test_path_helpers():
+    assert parent_path("/") is None
+    assert parent_path("/a") == "/"
+    assert parent_path("/a/b/c") == "/a/b"
+    assert ancestor_paths("/a/b") == ["/a/b", "/a", "/"]

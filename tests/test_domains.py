@@ -1,8 +1,6 @@
-"""Property tests (hypothesis) for the hierarchical resource domains —
-the system's core invariants, mirroring the memcg contract."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
-
+"""Deterministic tests for the hierarchical resource domains — the
+memcg contract's directed cases.  (The randomized invariant sweeps
+live in ``test_properties.py`` and need ``hypothesis``.)"""
 from repro.core import domains as D
 
 
@@ -14,74 +12,6 @@ def mk_tree(cap=1000):
     t.create("/a/s1/tool", high=50)
     t.create("/b/s2")
     return t
-
-
-LEAVES = ["/a/s1/tool", "/a/s1", "/b/s2", "/a", "/b"]
-
-ops = st.lists(
-    st.tuples(st.sampled_from(["charge", "uncharge", "kill", "freeze",
-                               "thaw"]),
-              st.sampled_from(LEAVES),
-              st.integers(min_value=1, max_value=200)),
-    min_size=1, max_size=60)
-
-
-@given(ops)
-@settings(max_examples=200, deadline=None)
-def test_invariants_random_ops(op_list):
-    t = mk_tree()
-    charged = {p: 0 for p in LEAVES}       # net direct charges per domain
-    for op, path, amt in op_list:
-        if op == "charge":
-            d = t.get(path)
-            before = {n.name: n.usage for n in d.ancestors()}
-            res = t.try_charge(path, amt)
-            if not res.ok:
-                # atomicity: a failed charge changes nothing
-                for n in d.ancestors():
-                    assert n.usage == before[n.name]
-            else:
-                charged[path] += amt
-        elif op == "uncharge":
-            take = min(amt, t.get(path).usage, charged[path])
-            if take > 0:
-                t.uncharge(path, take)
-                charged[path] -= take
-        elif op == "kill":
-            t.kill(path)
-            for sub in t.subtree(path):
-                for p in charged:
-                    if p == sub.name or p.startswith(sub.name + "/"):
-                        charged[p] = 0
-        elif op == "freeze":
-            t.freeze(path)
-        else:
-            t.thaw(path)
-
-        # ---- invariants after every op ----
-        # no domain exceeds its hard limit
-        for n in t.subtree("/"):
-            assert n.usage <= n.max
-            assert n.usage >= 0
-            assert n.peak >= n.usage
-        # hierarchical accounting: parent usage >= sum of children
-        for n in t.subtree("/"):
-            s = sum(c.usage for c in n.children.values())
-            assert n.usage >= s
-
-
-@given(st.integers(1, 500), st.integers(1, 500))
-@settings(max_examples=100, deadline=None)
-def test_charge_uncharge_roundtrip(a, b):
-    t = mk_tree(cap=2000)
-    r1 = t.try_charge("/a/s1", a)
-    r2 = t.try_charge("/b/s2", b)
-    if r1.ok:
-        t.uncharge("/a/s1", a)
-    if r2.ok:
-        t.uncharge("/b/s2", b)
-    assert t.root.usage == 0
-    assert t.get("/a").usage == 0 and t.get("/b").usage == 0
 
 
 def test_frozen_domain_denies_charge():

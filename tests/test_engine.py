@@ -127,4 +127,4 @@ def test_feedback_shrinks_append(model):
 def test_domain_accounting_clean_at_end(model):
     eng = run_mode(model, "inkernel", use_freeze=True,
                    session_high={"lo1": 12, "lo2": 12})
-    assert int(eng.table.state["usage"][0]) == 0
+    assert eng.cg.usage("/") == 0

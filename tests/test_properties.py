@@ -1,0 +1,140 @@
+"""Property tests (hypothesis) for the resource-control core.
+
+Two families:
+  * memcg-contract invariants of the pure-python ``DomainTree`` under
+    random op sequences;
+  * host/device cross-validation driven through the unified
+    ``AgentCgroup`` control plane — the SAME op sequence runs against
+    ``HostTreeBackend`` and ``DeviceTableBackend`` and must produce
+    identical grant decisions and usage.
+
+This module skips cleanly when ``hypothesis`` is absent (the directed
+cases in ``test_domains.py`` / ``test_controller.py`` /
+``test_cgroup.py`` run unconditionally).
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import domains as D
+from repro.core.cgroup import AgentCgroup, DomainSpec, HostTreeBackend
+from repro.core.controller import ControllerConfig
+
+
+def mk_tree(cap=1000):
+    t = D.DomainTree(cap)
+    t.create("/a", high=400, priority=D.HIGH)
+    t.create("/b", max=300, priority=D.LOW)
+    t.create("/a/s1")
+    t.create("/a/s1/tool", high=50)
+    t.create("/b/s2")
+    return t
+
+
+LEAVES = ["/a/s1/tool", "/a/s1", "/b/s2", "/a", "/b"]
+
+ops = st.lists(
+    st.tuples(st.sampled_from(["charge", "uncharge", "kill", "freeze",
+                               "thaw"]),
+              st.sampled_from(LEAVES),
+              st.integers(min_value=1, max_value=200)),
+    min_size=1, max_size=60)
+
+
+@given(ops)
+@settings(max_examples=200, deadline=None)
+def test_invariants_random_ops(op_list):
+    t = mk_tree()
+    charged = {p: 0 for p in LEAVES}       # net direct charges per domain
+    for op, path, amt in op_list:
+        if op == "charge":
+            d = t.get(path)
+            before = {n.name: n.usage for n in d.ancestors()}
+            res = t.try_charge(path, amt)
+            if not res.ok:
+                # atomicity: a failed charge changes nothing
+                for n in d.ancestors():
+                    assert n.usage == before[n.name]
+            else:
+                charged[path] += amt
+        elif op == "uncharge":
+            take = min(amt, t.get(path).usage, charged[path])
+            if take > 0:
+                t.uncharge(path, take)
+                charged[path] -= take
+        elif op == "kill":
+            t.kill(path)
+            for sub in t.subtree(path):
+                for p in charged:
+                    if p == sub.name or p.startswith(sub.name + "/"):
+                        charged[p] = 0
+        elif op == "freeze":
+            t.freeze(path)
+        else:
+            t.thaw(path)
+
+        # ---- invariants after every op ----
+        # no domain exceeds its hard limit
+        for n in t.subtree("/"):
+            assert n.usage <= n.max
+            assert n.usage >= 0
+            assert n.peak >= n.usage
+        # hierarchical accounting: parent usage >= sum of children
+        for n in t.subtree("/"):
+            s = sum(c.usage for c in n.children.values())
+            assert n.usage >= s
+
+
+@given(st.integers(1, 500), st.integers(1, 500))
+@settings(max_examples=100, deadline=None)
+def test_charge_uncharge_roundtrip(a, b):
+    t = mk_tree(cap=2000)
+    r1 = t.try_charge("/a/s1", a)
+    r2 = t.try_charge("/b/s2", b)
+    if r1.ok:
+        t.uncharge("/a/s1", a)
+    if r2.ok:
+        t.uncharge("/b/s2", b)
+    assert t.root.usage == 0
+    assert t.get("/a").usage == 0 and t.get("/b").usage == 0
+
+
+# ---------------------------------------------- host/device cross-validation
+
+
+def _mk_cg(kind: str) -> AgentCgroup:
+    if kind == "host":
+        cg = AgentCgroup(HostTreeBackend(500))
+    else:
+        from repro.core.cgroup import DeviceTableBackend
+        # zero-delay config: grant/deny semantics compared in isolation
+        # (throttle timing is step-quantized on device)
+        cg = AgentCgroup(DeviceTableBackend(
+            500, n_domains=16,
+            cfg=ControllerConfig(base_delay_ms=0.0, max_delay_ms=0.0)))
+    cg.mkdir("/t")
+    cg.mkdir("/t/a", DomainSpec(high=120))
+    cg.mkdir("/t/b", DomainSpec(max=200, priority=D.LOW))
+    cg.mkdir("/t/a/tool", DomainSpec(high=40))
+    return cg
+
+
+PATHS = ["/t/a/tool", "/t/a", "/t/b", "/t"]
+
+
+@given(st.lists(st.tuples(st.sampled_from(PATHS),
+                          st.integers(min_value=1, max_value=150)),
+                min_size=1, max_size=30))
+@settings(max_examples=60, deadline=None)
+def test_device_matches_host_via_cgroup_api(seq):
+    host, dev = _mk_cg("host"), _mk_cg("device")
+    for i, (path, amt) in enumerate(seq):
+        want = host.try_charge(path, amt, step=i)
+        got = dev.try_charge(path, amt, step=i)
+        assert got.granted == want.granted, (i, path, amt)
+    for path in PATHS + ["/"]:
+        assert dev.usage(path) == host.usage(path), path
+        assert dev.peak(path) == host.peak(path), path
