@@ -239,7 +239,8 @@ class HostTreeBackend:
                            for p in order], np.int64)
         active = np.ones(len(order), bool)
         return {"paths": order, "index": prow, "usage": usage, "high": high,
-                "max": maxl, "parent": parent, "active": active}
+                "max": maxl, "parent": parent, "active": active,
+                "root_usage": self.tree.root.usage}
 
     def set_time(self, t: float) -> None:
         self.tree.now_ms = t
@@ -445,7 +446,8 @@ class DeviceTableBackend:
                 "max": np.asarray(st["max"]),
                 "parent": np.asarray(st["parent"]),
                 "active": np.asarray(st["active"]),
-                "throttle_until": np.asarray(st["throttle_until"])}
+                "throttle_until": np.asarray(st["throttle_until"]),
+                "root_usage": int(st["usage"][0])}
 
     def set_time(self, t: float) -> None:
         self._now = t

@@ -1,0 +1,441 @@
+"""Sharded multi-tenant backend: the domain table across an N-device mesh.
+
+Third implementation of the ``Backend`` protocol (after the host tree
+and the single-device table): domain state lives as ``(n_shards,
+n_domains)`` arrays sharded over a 1-axis ``("shard",)`` mesh, one
+independent local table per device.  Placement is by *tenant subtree* —
+the first path component below ``/`` picks a shard (round-robin), and
+every descendant (sessions, tool-call leases) inherits it — so one
+tenant's burst is charged, throttled, and frozen entirely on its own
+device group, the multi-host analogue of the paper's per-tenant
+hierarchical cgroups.
+
+Enforcement runs in two modes, mirroring ``DeviceTableBackend``:
+
+  * host-driven (lifecycle, replay, cross-validation): ``try_charge``
+    routes the request to the owning shard's slice and additionally
+    enforces the *global* root capacity (sum of shard-root usage), so
+    grants match ``HostTreeBackend`` exactly;
+  * in-step (serving engine): ``device_view()`` returns pure functions
+    that take *global* handles, scatter the per-slot requests into a
+    ``(n_shards, m)`` matrix, and run ``controller.charge_batch`` on
+    every shard simultaneously inside ``shard_map`` — per-device
+    enforcement with no cross-device traffic on the hot path.
+
+Host-side reads reconcile across shards: ``/`` ``memory.current`` is
+the sum of shard-root usage, ``memory.peak`` the sum of shard-root
+peaks, and ``memory.events`` sums per-shard throttle state.  The root
+peak is what provisioning needs — each device group's high-water is
+what its HBM must actually hold — but note it is an *upper bound* on
+the instantaneous global peak whenever different groups peak at
+different times (exact for traffic confined to one shard, which is
+what the cross-backend parity sequence replays).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import compat
+from repro.core import controller as C
+from repro.core import domains as D
+from repro.core.cgroup import ChargeTicket, DomainSpec, parent_path
+from repro.core.events import Ev, EventLog
+
+UNLIMITED = D.UNLIMITED
+
+
+def _stacked_state(capacity: int, n_shards: int, n_domains: int) -> dict:
+    """Per-shard local tables: every shard's local index 0 is that device
+    group's root, capped at the full pool capacity."""
+    one = C.new_state(capacity, n_domains)
+    return {k: jnp.broadcast_to(v[None], (n_shards,) + v.shape)
+            for k, v in one.items()}
+
+
+class ShardedDeviceView:
+    """Jit-safe slice of the sharded backend: the live ``(S, n)`` state
+    pytree plus pure enforcement functions over *global* handles.  Each
+    function scatters its flat per-slot requests to the owning shards,
+    applies the single-device controller kernel per shard under
+    ``shard_map``, and gathers flat results — so the engine's jitted
+    step is backend-agnostic."""
+
+    def __init__(self, backend: "ShardedTableBackend"):
+        self._backend = backend
+        self.cfg = backend.cfg
+        self.mesh = backend.mesh
+        self.n_shards = backend.n_shards
+        self.per_shard = backend.per_shard_domains
+
+    @property
+    def state(self) -> dict:
+        return self._backend.state
+
+    # ------------------------------------------------------------- helpers
+
+    def _split(self, dom):
+        dom = dom.astype(jnp.int32)
+        valid = dom >= 0
+        shard = jnp.where(valid, dom // self.per_shard, 0)
+        local = jnp.where(valid, dom % self.per_shard, -1)
+        sel = shard[None, :] == jnp.arange(self.n_shards)[:, None]
+        sel = sel & valid[None, :]
+        return valid, shard, jnp.where(sel, local[None, :], -1)
+
+    def _shard_specs(self, n_in, n_out):
+        return ((P("shard"),) * n_in, (P("shard"),) * n_out)
+
+    def _run(self, fn, state, *operands, n_out):
+        """shard_map ``fn`` over the per-shard slices of state+operands."""
+        def local(st, *ops):
+            st1 = jax.tree.map(lambda x: x[0], st)
+            ops1 = [o[0] for o in ops]
+            outs = fn(st1, *ops1)
+            return tuple(jax.tree.map(lambda x: x[None], o) for o in outs)
+        in_specs, out_specs = self._shard_specs(1 + len(operands), n_out)
+        return compat.shard_map(local, mesh=self.mesh, in_specs=in_specs,
+                                out_specs=out_specs)(state, *operands)
+
+    # ------------------------------------------------------------ the ops
+
+    def charge(self, state, dom, amt, step):
+        """In-step hierarchical charge: (state, granted, stalled); every
+        shard serves its own tenants' requests in the same program."""
+        m = dom.shape[0]
+        valid, shard, dom2 = self._split(dom)
+        amt2 = jnp.broadcast_to(amt.astype(jnp.int32)[None, :],
+                                (self.n_shards, m))
+        step2 = jnp.broadcast_to(jnp.asarray(step, jnp.int32)[None],
+                                 (self.n_shards,))
+
+        def local(st, d, a, s):
+            return C.charge_batch(st, d, a, s[()], self.cfg)
+
+        new_state, g2, s2 = self._run(local, state, dom2, amt2, step2,
+                                      n_out=3)
+        rows = jnp.arange(m)
+        granted = g2[shard, rows] & valid
+        stalled = s2[shard, rows] & valid
+        return new_state, granted, stalled
+
+    def account(self, state, dom, amt):
+        """Post-hoc unconditional charge (user-space baseline path)."""
+        return self.uncharge(state, dom, -amt)
+
+    def uncharge(self, state, dom, amt):
+        m = dom.shape[0]
+        _, _, dom2 = self._split(dom)
+        amt2 = jnp.broadcast_to(amt.astype(jnp.int32)[None, :],
+                                (self.n_shards, m))
+
+        def local(st, d, a):
+            return (C.uncharge_batch(st, d, a),)
+
+        (new_state,) = self._run(local, state, dom2, amt2, n_out=1)
+        return new_state
+
+    def gate(self, state, dom, step):
+        """Per-slot advance gate (no frozen/throttled ancestor)."""
+        m = dom.shape[0]
+        valid, shard, dom2 = self._split(dom)
+        step2 = jnp.broadcast_to(jnp.asarray(step, jnp.int32)[None],
+                                 (self.n_shards,))
+
+        def local(st, d, s):
+            return (C.slot_gate(st, d, s[()]),)
+
+        (g2,) = self._run(local, state, dom2, step2, n_out=1)
+        return g2[shard, jnp.arange(m)] & valid
+
+    def commit(self, state: dict) -> None:
+        self._backend.state = state
+
+
+class ShardedTableBackend:
+    """Device-sharded backend: per-tenant device-group placement,
+    per-shard in-step enforcement, host-side reconciliation."""
+
+    def __init__(self, capacity: int, n_domains: int = 64, cfg=None,
+                 log: Optional[EventLog] = None, *,
+                 n_shards: Optional[int] = None, mesh=None):
+        self.cfg = cfg or C.ControllerConfig()
+        self.capacity = capacity
+        if mesh is None:
+            devs = jax.devices()
+            n_shards = n_shards or len(devs)
+            mesh = compat.make_auto_mesh((n_shards,), ("shard",),
+                                         devices=devs[:n_shards])
+        self.mesh = mesh
+        self.n_shards = mesh.devices.size
+        self.per_shard_domains = n_domains
+        st = _stacked_state(capacity, self.n_shards, n_domains)
+        sh = NamedSharding(mesh, P("shard"))
+        self.state = {k: jax.device_put(v, sh) for k, v in st.items()}
+        # path -> (shard, local idx); "/" is every shard's local root but
+        # addressed through shard 0
+        self.index: dict[str, tuple[int, int]] = {"/": (0, 0)}
+        self._free = [list(range(1, n_domains))
+                      for _ in range(self.n_shards)]
+        self._tenant_shard: dict[str, int] = {}
+        self._next_shard = 0
+        self.log = log if log is not None else EventLog()
+        self._now = 0.0
+
+    # ------------------------------------------------------------ placement
+
+    @property
+    def n_domains(self) -> int:
+        """Global handle space (shard-major), for flat consumers."""
+        return self.n_shards * self.per_shard_domains
+
+    def placement(self) -> dict:
+        """tenant path -> shard (device group) — the paper's
+        tenant-subtree-to-device mapping, for tests and benchmarks."""
+        return dict(self._tenant_shard)
+
+    def _shard_for(self, path: str) -> int:
+        if path == "/":
+            return 0
+        tenant = "/" + path.strip("/").split("/")[0]
+        if tenant not in self._tenant_shard:
+            self._tenant_shard[tenant] = self._next_shard % self.n_shards
+            self._next_shard += 1
+        return self._tenant_shard[tenant]
+
+    def _handle(self, shard: int, idx: int) -> int:
+        return shard * self.per_shard_domains + idx
+
+    def device_view(self) -> ShardedDeviceView:
+        return ShardedDeviceView(self)
+
+    # ---------------------------------------------------- per-shard slices
+
+    def _slice(self, shard: int) -> dict:
+        return {k: v[shard] for k, v in self.state.items()}
+
+    def _adopt(self, shard: int, sub: dict, keys=None) -> None:
+        keys = keys if keys is not None else sub.keys()
+        self.state = dict(self.state, **{
+            k: self.state[k].at[shard].set(sub[k]) for k in keys})
+
+    # ------------------------------------------------------------ lifecycle
+
+    def mkdir(self, path: str, spec: DomainSpec) -> int:
+        from repro.core.cgroup import ancestor_paths
+        assert len(ancestor_paths(path)) <= C.DEPTH, f"{path}: deeper than DEPTH"
+        assert path not in self.index, path
+        shard = self._shard_for(path)
+        pshard, pidx = self.index[parent_path(path)]
+        if parent_path(path) != "/":
+            assert pshard == shard, (path, "crosses its tenant's shard")
+        else:
+            pidx = 0                       # this shard's local root
+        idx = self._free[shard].pop(0)
+        self.index[path] = (shard, idx)
+        st = self.state
+        upd = {
+            "high": spec.high, "max": spec.max, "low": spec.low,
+            "parent": pidx, "priority": spec.priority, "usage": 0,
+            "peak": 0, "frozen": False, "active": True, "throttle_until": 0,
+        }
+        self.state = dict(st, **{
+            k: st[k].at[shard, idx].set(v) for k, v in upd.items()})
+        self.log.emit(self._now, Ev.CREATE, path, high=spec.high,
+                      max=spec.max, shard=shard)
+        return self._handle(shard, idx)
+
+    def rmdir(self, path: str, transfer_residual: bool) -> int:
+        shard, idx = self.index[path]
+        residual = int(self.state["usage"][shard, idx])
+        parent = parent_path(path)
+        if residual:
+            sub = self._slice(shard)
+            sub = C.uncharge_batch(sub, jnp.array([idx], jnp.int32),
+                                   jnp.array([residual], jnp.int32))
+            self._adopt(shard, sub, keys=("usage",))
+        st = self.state
+        self.state = dict(
+            st,
+            active=st["active"].at[shard, idx].set(False),
+            frozen=st["frozen"].at[shard, idx].set(False),
+            parent=st["parent"].at[shard, idx].set(-1))
+        del self.index[path]
+        self._free[shard].append(idx)
+        if transfer_residual and residual and parent is not None:
+            self.charge_unchecked(parent, residual)
+        self.log.emit(self._now, Ev.REMOVE, path)
+        return residual
+
+    def exists(self, path: str) -> bool:
+        return path in self.index
+
+    def paths(self) -> list[str]:
+        return list(self.index)
+
+    def handle(self, path: str) -> int:
+        return self._handle(*self.index[path])
+
+    def path_of(self, handle: int) -> str:
+        key = (handle // self.per_shard_domains,
+               handle % self.per_shard_domains)
+        for p, si in self.index.items():
+            if si == key:
+                return p
+        raise KeyError(handle)
+
+    # --------------------------------------------------- charging (host path)
+
+    def _root_total(self) -> int:
+        return int(jnp.sum(self.state["usage"][:, 0]))
+
+    def try_charge(self, path: str, pages: int,
+                   step: Optional[int]) -> ChargeTicket:
+        if step is None:
+            step = int(self._now)
+        shard, idx = self.index[path]
+        # global root capacity: shard-local tables each cap at the full
+        # pool, so the cross-shard sum is enforced here, host-side —
+        # exactly the HostTreeBackend root-max contract.  Read the live
+        # root max so write("/", "memory.max", v) takes effect.
+        cap = int(self.state["max"][0, 0])
+        if cap < UNLIMITED and self._root_total() + pages > cap:
+            return ChargeTicket(granted=False, stalled=True, blocked_by="/")
+        sub = self._slice(shard)
+        sub, granted, stalled = C.charge_batch(
+            sub, jnp.array([idx], jnp.int32), jnp.array([pages], jnp.int32),
+            step, self.cfg)
+        self._adopt(shard, sub, keys=("usage", "peak", "throttle_until"))
+        return ChargeTicket(granted=bool(granted[0]),
+                            stalled=bool(stalled[0]))
+
+    def uncharge(self, path: str, pages: int) -> None:
+        shard, idx = self.index[path]
+        sub = C.uncharge_batch(self._slice(shard),
+                               jnp.array([idx], jnp.int32),
+                               jnp.array([pages], jnp.int32))
+        self._adopt(shard, sub, keys=("usage",))
+
+    def charge_unchecked(self, path: str, pages: int) -> None:
+        shard, idx = self.index[path]
+        sub = C.host_charge(self._slice(shard), idx, pages)
+        self._adopt(shard, sub, keys=("usage", "peak"))
+
+    # ------------------------------------------------------ subtree control
+
+    def _subtree(self, path: str) -> list[str]:
+        if path == "/":
+            return list(self.index)
+        return [p for p in self.index
+                if p == path or p.startswith(path.rstrip("/") + "/")]
+
+    def _set_frozen(self, path: str, flag: bool) -> None:
+        st = self.state
+        frozen = st["frozen"]
+        for p in self._subtree(path):
+            shard, idx = self.index[p]
+            if p == "/":               # freeze every device group's root
+                frozen = frozen.at[:, 0].set(flag)
+            else:
+                frozen = frozen.at[shard, idx].set(flag)
+        self.state = dict(st, frozen=frozen)
+
+    def freeze(self, path: str) -> None:
+        self._set_frozen(path, True)
+        self.log.emit(self._now, Ev.FREEZE, path)
+
+    def thaw(self, path: str) -> None:
+        self._set_frozen(path, False)
+        self.log.emit(self._now, Ev.THAW, path)
+
+    def kill(self, path: str) -> int:
+        """Atomic subtree kill, same semantics as ``DeviceTableBackend``:
+        usage released from the owning shard's chain, every node retired
+        in place (still registered, denying charges via frozen)."""
+        shard, idx = self.index[path]
+        freed = int(self.state["usage"][shard, idx])
+        if freed:
+            self.uncharge(path, freed)
+        st = self.state
+        usage, active, frozen = st["usage"], st["active"], st["frozen"]
+        for p in self._subtree(path):
+            s, i = self.index[p]
+            usage = usage.at[s, i].set(0)
+            active = active.at[s, i].set(False)
+            frozen = frozen.at[s, i].set(True)
+        self.state = dict(st, usage=usage, active=active, frozen=frozen)
+        self.log.emit(self._now, Ev.OOM_KILL, path, freed=freed)
+        return freed
+
+    # --------------------------------------------------------- control files
+
+    _FILE_KEY = {"memory.current": "usage", "memory.peak": "peak",
+                 "memory.high": "high", "memory.max": "max",
+                 "memory.low": "low", "memory.priority": "priority",
+                 "cgroup.freeze": "frozen"}
+
+    def read(self, path: str, file: str):
+        if path == "/":
+            # reconcile the global root across device groups
+            if file == "memory.current":
+                return self._root_total()
+            if file == "memory.peak":
+                return int(jnp.sum(self.state["peak"][:, 0]))
+            if file == "memory.events":
+                # flag, not a shard count — DeviceTableBackend semantics
+                tu = self.state["throttle_until"][:, 0]
+                return {"high": 0, "max": 0,
+                        "throttle": int(bool(jnp.any(tu > 0))), "oom_kill": 0}
+            return int(self.state[self._FILE_KEY[file]][0, 0])
+        shard, idx = self.index[path]
+        if file == "memory.events":
+            tu = int(self.state["throttle_until"][shard, idx])
+            return {"high": 0, "max": 0, "throttle": int(tu > 0),
+                    "oom_kill": 0}
+        return int(self.state[self._FILE_KEY[file]][shard, idx])
+
+    def write(self, path: str, file: str, value) -> None:
+        if file == "cgroup.freeze":
+            (self.freeze if int(value) else self.thaw)(path)
+            return
+        key = self._FILE_KEY[file]
+        st = self.state
+        if path == "/":                # root limits apply to every group
+            if file == "memory.max":
+                self.capacity = int(value)
+            self.state = dict(st, **{
+                key: st[key].at[:, 0].set(int(value))})
+            return
+        shard, idx = self.index[path]
+        self.state = dict(st, **{
+            key: st[key].at[shard, idx].set(int(value))})
+
+    # --------------------------------------------------------------- queries
+
+    def snapshot(self) -> dict:
+        """One host sync; rows addressable by global handle
+        (``shard * n_domains + local``), parent pointers rebased to
+        global handles, plus the reconciled root usage."""
+        st = {k: np.asarray(v) for k, v in self.state.items()}
+        S, n = self.n_shards, self.per_shard_domains
+        base = (np.arange(S) * n)[:, None]
+        parent = st["parent"]
+        parent = np.where(parent >= 0, parent + base, -1).reshape(-1)
+        return {"paths": list(self.index),
+                "index": {p: self._handle(*si)
+                          for p, si in self.index.items()},
+                "usage": st["usage"].reshape(-1),
+                "high": st["high"].reshape(-1),
+                "max": st["max"].reshape(-1),
+                "parent": parent,
+                "active": st["active"].reshape(-1),
+                "throttle_until": st["throttle_until"].reshape(-1),
+                "root_usage": int(st["usage"][:, 0].sum()),
+                "root_handles": [s * n for s in range(S)]}
+
+    def set_time(self, t: float) -> None:
+        self._now = t

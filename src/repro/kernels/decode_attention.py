@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 NEG_INF = -1e30
 
 
@@ -101,7 +103,7 @@ def decode_attention_pallas(q, k_cache, v_cache, lengths, *,
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((B, hkv, g, dv), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="flash_decode",
@@ -184,7 +186,7 @@ def paged_decode_attention_pallas(q, k_pages, v_pages, page_table, lengths, *,
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((B, hkv, g, dv), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="paged_flash_decode",

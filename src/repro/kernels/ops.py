@@ -12,24 +12,21 @@ Every op has three implementations:
 """
 from __future__ import annotations
 
-import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.kernels import ref
 
 
 def _on_tpu() -> bool:
-    try:
-        return jax.devices()[0].platform == "tpu"
-    except RuntimeError:
-        return False
+    return compat.on_tpu()
 
 
 def _interpret() -> bool:
-    return os.environ.get("REPRO_FORCE_PALLAS_INTERPRET", "0") == "1"
+    return compat.force_interpret()
 
 
 def _resolve(impl: Optional[str]) -> str:

@@ -32,6 +32,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.analysis import hlo as hlo_mod
 from repro.analysis.roofline import roofline_from_costs
 from repro.configs import SHAPES, cell_applicability, get_config, ARCH_IDS
@@ -130,7 +131,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     compiled = lowered.compile()
     t_compile = time.time() - t0
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = compat.cost_analysis(compiled)
     txt = compiled.as_text()
     parsed = hlo_mod.analyze(txt, pod_size=POD_CHIPS)
     per_dev_bytes = (ma.argument_size_in_bytes + ma.temp_size_in_bytes

@@ -18,6 +18,7 @@ from typing import Optional
 
 import jax
 
+from repro import compat
 from repro.configs.base import ShapeConfig
 from repro.models.schema import RULES
 
@@ -36,8 +37,7 @@ POD_CHIPS = 256                 # devices per pod (16 x 16)
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_auto_mesh(shape, axes)
 
 
 def _batch_axes(mesh) -> tuple:

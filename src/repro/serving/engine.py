@@ -49,9 +49,11 @@ from repro.serving.session import Phase, Session, SState
 class EngineConfig:
     max_slots: int = 8
     s_max: int = 512
-    pool_pages: int = 256
+    pool_pages: int = 256                # KV pool per device group
     page_tokens: int = 16
     mode: str = "inkernel"               # inkernel | userspace | nolimit
+    backend: str = "device"              # device | sharded
+    n_shards: Optional[int] = None       # sharded: device-group count
     ctrl: ControllerConfig = ControllerConfig(step_ms=10.0)
     temperature: float = 0.0
     # daemon knobs
@@ -124,9 +126,19 @@ class Engine:
         self.ecfg = ecfg
         self.caches = SlotCaches(cfg, ecfg.max_slots, ecfg.s_max)
         self.accountant = PageAccountant(ecfg.page_tokens)
-        self.cg = AgentCgroup(DeviceTableBackend(
-            ecfg.pool_pages, n_domains=4 * ecfg.max_slots + 8,
-            cfg=ecfg.ctrl))
+        n_domains = 4 * ecfg.max_slots + 8
+        if ecfg.backend == "sharded":
+            from repro.core.sharded import ShardedTableBackend
+            be = ShardedTableBackend(ecfg.pool_pages, n_domains=n_domains,
+                                     cfg=ecfg.ctrl, n_shards=ecfg.n_shards)
+        else:
+            be = DeviceTableBackend(ecfg.pool_pages, n_domains=n_domains,
+                                    cfg=ecfg.ctrl)
+        self.cg = AgentCgroup(be)
+        # pool_pages is per device group: each shard root is capped at
+        # pool_pages in-step, so the aggregate the daemon reasons about
+        # (root_usage sums every group) is pool_pages * n_shards
+        self.pool_capacity = ecfg.pool_pages * getattr(be, "n_shards", 1)
         self._view = self.cg.device_view()
         self.log = EventLog()
         self.metrics = EngineMetrics()
@@ -250,10 +262,10 @@ class Engine:
     def _daemon(self) -> None:
         e = self.ecfg
         snap = self.cg.snapshot()
-        root_usage = int(snap["usage"][0])
+        root_usage = int(snap.get("root_usage", snap["usage"][0]))
         self.metrics.root_usage.append(root_usage)
         self.metrics.overshoot_pages = max(
-            self.metrics.overshoot_pages, root_usage - e.pool_pages)
+            self.metrics.overshoot_pages, root_usage - self.pool_capacity)
         usage, high = snap["usage"], snap["high"]
         lim = high < D.UNLIMITED
         if lim.any():
@@ -261,7 +273,7 @@ class Engine:
                 self.metrics.session_overshoot_pages,
                 int((usage[lim] - high[lim]).max()))
         # freeze under extreme pressure (graceful degradation step 2)
-        if e.use_freeze and root_usage > e.freeze_threshold * e.pool_pages:
+        if e.use_freeze and root_usage > e.freeze_threshold * self.pool_capacity:
             cands = [self.sessions[sid] for sid in self.slot_session
                      if sid is not None
                      and self.sessions[sid].state is SState.RUNNING
@@ -275,7 +287,7 @@ class Engine:
             if frozen and self.caches.n_free > 0:
                 cand = min(frozen, key=lambda s: s.pages)
                 if (root_usage + cand.pages
-                        < e.thaw_threshold * e.pool_pages):
+                        < e.thaw_threshold * self.pool_capacity):
                     self._thaw(cand)
         self._try_admit()
 
@@ -367,7 +379,7 @@ class Engine:
         nxt = np.asarray(nxt)
         granted = np.asarray(granted)
         # throttle-trigger accounting (memcg_bpf_ops delay counter)
-        tu = np.asarray(self._view.state["throttle_until"])
+        tu = np.asarray(self._view.state["throttle_until"]).reshape(-1)
         self.metrics.throttle_triggers += int(np.sum(tu > self._prev_throttle))
         self._prev_throttle = np.maximum(tu, self._prev_throttle)
 

@@ -23,8 +23,8 @@ def test_parser_matches_analytic_scan_flops():
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.analysis.hlo import analyze
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_auto_mesh
+mesh = make_auto_mesh((2, 4), ("data", "model"))
 D = 128
 def body(x, w):
     return jax.nn.relu(jnp.einsum("bd,df->bf", x, w)), None
@@ -49,11 +49,12 @@ def test_parser_matches_cost_analysis_no_scan():
     out = _run(r"""
 import jax, jax.numpy as jnp
 from repro.analysis.hlo import analyze
+from repro.compat import cost_analysis
 def f(a, b):
     return (a @ b).sum()
 a = jnp.ones((64, 128)); b = jnp.ones((128, 32))
 compiled = jax.jit(f).lower(a, b).compile()
-ca = compiled.cost_analysis()
+ca = cost_analysis(compiled)
 r = analyze(compiled.as_text())
 # dot flops identical when there is no while loop
 assert abs(r["flops"] - 2 * 64 * 128 * 32) < 1e3, r["flops"]
@@ -68,8 +69,8 @@ def test_collective_classification_dcn():
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.analysis.hlo import analyze
-mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_auto_mesh
+mesh = make_auto_mesh((2, 4), ("pod", "data"))
 x = jax.ShapeDtypeStruct((8, 64), jnp.float32,
                          sharding=NamedSharding(mesh, P(("pod", "data"), None)))
 def f(t):

@@ -128,3 +128,18 @@ def test_domain_accounting_clean_at_end(model):
     eng = run_mode(model, "inkernel", use_freeze=True,
                    session_high={"lo1": 12, "lo2": 12})
     assert eng.cg.usage("/") == 0
+
+
+def test_sharded_backend_serves_multitenant(model):
+    """Same workload on the ShardedTableBackend: in-step enforcement now
+    runs per device group under shard_map, but the guarantees (survival,
+    zero pool overshoot, clean accounting) are backend-invariant."""
+    eng = run_mode(model, "inkernel", backend="sharded", use_freeze=True,
+                   session_high={"lo1": 12, "lo2": 12})
+    r = eng.report()
+    assert r["survival"] == 1.0
+    assert r["overshoot_pages"] == 0
+    assert r["throttle_triggers"] > 0
+    assert eng.cg.usage("/") == 0
+    # every tenant subtree was placed on a device group
+    assert "/t" in eng.cg.backend.placement()

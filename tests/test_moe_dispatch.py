@@ -68,8 +68,8 @@ from repro.models.schema import init_params, shardings
 from repro.perf import DEFAULT_PERF, replace as perf_replace
 from repro.sharding_ctx import activation_rules
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_auto_mesh
+mesh = make_auto_mesh((2, 4), ("data", "model"))
 rules = {"tp": "model", "fsdp": "data", "ep": "model", "ep2": "data",
          "act_batch": "data", "act_seq": "model", "layers": None}
 cfg = dataclasses.replace(reduced(get_config("jamba-v0.1-52b")),

@@ -129,7 +129,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.training.compression import compressed_psum
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_auto_mesh
+mesh = make_auto_mesh((8,), ("data",))
 x = jnp.linspace(-1.0, 1.0, 64).reshape(8, 8)
 with mesh:
     got = jax.jit(lambda t: compressed_psum(t, mesh, "data"))(x)
