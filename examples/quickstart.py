@@ -56,9 +56,9 @@ assert host == dev, "backends diverged!"
 print("\n== 1b. backend-specific extras ==")
 cg = AgentCgroup(HostTreeBackend(1000))
 cg.mkdir("/sess", DomainSpec(high=50))
-cg.try_charge("/sess", 80)
+t = cg.try_charge("/sess", 80)
 print(f"host:   memory.events = {cg.read('/sess', 'memory.events')}, "
-      f"graduated delay {cg.throttle_delay_ms('/sess'):.0f} ms")
+      f"graduated delay {t.delay_ms:.0f} ms")
 dcg = AgentCgroup(DeviceTableBackend(1000, cfg=ControllerConfig()))
 idx = dcg.mkdir("/sess", DomainSpec(high=50))
 view = dcg.device_view()
@@ -66,6 +66,20 @@ st, granted, _ = jax.jit(view.charge)(view.state, jnp.array([idx]),
                                       jnp.array([80], jnp.int32), 0)
 print(f"device: in-step charge granted={bool(granted[0])}, "
       f"throttled until step {int(st['throttle_until'][idx])}")
+
+print("\n== 1c. pluggable policy programs (memcg_bpf_ops analogue) ==")
+from repro.core.progs import TokenBucketProgram
+
+pcg = AgentCgroup(DeviceTableBackend(1000))
+pcg.attach("/", TokenBucketProgram(bucket_capacity=16, refill=(1, 2, 4)))
+pcg.mkdir("/agent")
+g0 = pcg.try_charge("/agent", 16, step=0).granted    # drains the bucket
+g1 = pcg.try_charge("/agent", 16, step=1).granted    # rate-limited
+pcg.update_params("/agent", refill_normal=16.0)      # live retune: no re-jit
+g2 = pcg.try_charge("/agent", 16, step=2).granted    # refilled at new rate
+print(f"token bucket: step0 granted={g0}, step1 granted={g1}, "
+      f"after update_params(refill_normal=16) step2 granted={g2}")
+assert (g0, g1, g2) == (True, False, True)
 
 print("\n== 2. train a reduced llama3.2 for 10 steps ==")
 cfg = dataclasses.replace(reduced(get_config("llama3.2-3b")),

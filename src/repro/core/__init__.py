@@ -3,6 +3,8 @@ JAX serving pod (see DESIGN.md §2 for the kernel->TPU mapping).
 
   cgroup      — the unified cgroupfs-style control plane (AgentCgroup
                 facade + pluggable host/device backends + intent channel)
+  progs       — attachable in-step policy programs (memcg_bpf_ops
+                analogue): PolicyProgram hooks over a live param table
   domains     — hierarchical resource domains (cgroup v2 analogue)
   accounting  — PSI-style pressure + allocation-latency statistics
   controller  — device-resident state + in-step (jitted) enforcement
@@ -16,6 +18,9 @@ from repro.core.domains import (DomainTree, Domain, ChargeResult,
 from repro.core.cgroup import (AgentCgroup, Backend, ChargeTicket,
                                DeviceTableBackend, DeviceView, DomainSpec,
                                HostTreeBackend, IntentChannel, Lease)
+from repro.core.progs import (ChainView, GraduatedThrottleProgram,
+                              PolicyProgram, Request, TokenBucketProgram,
+                              Verdict, charge_decision)
 from repro.core.events import Ev, Event, EventLog
 from repro.core.accounting import Accounting, LatencyStats, PSITracker
 from repro.core.intent import (Hint, AdaptiveAgentModel, Feedback,
@@ -29,4 +34,6 @@ __all__ = [
     "Ev", "Event", "EventLog", "Accounting", "LatencyStats",
     "PSITracker", "Hint", "AdaptiveAgentModel", "Feedback", "hint_to_high",
     "make_feedback", "parse_hint", "FrozenStore",
+    "ChainView", "GraduatedThrottleProgram", "PolicyProgram", "Request",
+    "TokenBucketProgram", "Verdict", "charge_decision",
 ]

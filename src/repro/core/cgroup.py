@@ -30,17 +30,29 @@ Backends conform to the ``Backend`` protocol:
 Because both backends speak the same op vocabulary, host/device
 cross-validation is one loop: replay an op sequence against two
 ``AgentCgroup`` instances and compare ``usage``/``peak``/grants.
+
+Enforcement decisions on EVERY backend dispatch into one attached
+``PolicyProgram`` (``core/progs.py``, the memcg_bpf_ops analogue):
+
+    cg.attach("/", TokenBucketProgram(bucket_capacity=32))  # swap code
+    cg.update_params("/tenant", overage_gain=25.0)          # retune live
+
+``attach`` swaps the decision code (a recompile for jitted consumers,
+like loading a new BPF object); ``update_params`` writes the program's
+per-domain parameter table (plain state — never a retrace).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Iterable, Optional, Protocol, Union, runtime_checkable
+from dataclasses import dataclass
+from typing import Optional, Protocol, Union, runtime_checkable
 
 import numpy as np
 
 from repro.core import domains as D
 from repro.core.events import Ev, EventLog
 from repro.core.intent import Feedback, Hint, hint_to_high, make_feedback
+from repro.core.progs import (ChainView, PolicyProgram, Request, as_program,
+                              charge_decision, path_in_scope)
 
 UNLIMITED = D.UNLIMITED
 
@@ -69,11 +81,14 @@ class ChargeTicket:
     the engine's graceful-degradation path never OOM-kills in-step).
     ``blocked_by``/``over_high`` carry the host backend's detail; the
     device backend reports grants only (its detail lives in-step).
+    ``delay_ms`` is the program-imposed throttle window now pending on
+    the charged domain (get_high_delay_ms), 0 when none.
     """
     granted: bool
     stalled: bool = False
     blocked_by: Optional[str] = None
     over_high: tuple = ()
+    delay_ms: float = 0.0
 
 
 def parent_path(path: str) -> Optional[str]:
@@ -96,7 +111,10 @@ class Backend(Protocol):
     """What a conforming enforcement substrate must provide."""
 
     log: EventLog
+    prog: PolicyProgram
 
+    def attach(self, scope: str, prog: PolicyProgram) -> None: ...
+    def update_params(self, path: str, kv: dict) -> None: ...
     def mkdir(self, path: str, spec: DomainSpec) -> int: ...
     def rmdir(self, path: str, transfer_residual: bool) -> int: ...
     def exists(self, path: str) -> bool: ...
@@ -120,14 +138,60 @@ class Backend(Protocol):
 
 
 class HostTreeBackend:
-    """Reference backend: the pure-python ``DomainTree`` semantics."""
+    """Reference backend: the pure-python ``DomainTree`` data model, with
+    every charge *decision* dispatched into the attached
+    ``PolicyProgram`` — the literal same ``charge_decision`` the device
+    kernels trace, jit-compiled once per program and chain depth.  This
+    is what makes trace replay and the serving engine impossible to
+    drift: one decision path, three substrates.
 
-    def __init__(self, capacity: int, log: Optional[EventLog] = None):
+    Clock convention: ``try_charge(..., step=k)`` runs on the integer
+    step clock (throttle windows quantize to ``prog.step_ms`` steps,
+    matching the device backends bit-for-bit); ``step=None`` runs on the
+    facade's millisecond clock (``set_time``) with unquantized windows —
+    what the trace-replay simulator uses.  Don't mix the two on one
+    instance.
+    """
+
+    def __init__(self, capacity: int, log: Optional[EventLog] = None,
+                 prog: Optional[PolicyProgram] = None):
         self.tree = D.DomainTree(capacity, log)
         self.log = self.tree.log
         self._ids: dict[str, int] = {"/": 0}
         self._paths: dict[int, str] = {0: "/"}
         self._next_id = 1
+        self.prog = as_program(prog)
+        self.attach_scope = "/"
+        self._rows: dict[str, np.ndarray] = {"/": self.prog.default_row()}
+        self._decide = None              # jitted charge_decision, per program
+
+    # -------------------------------------------------------------- programs
+
+    def _in_scope(self, path: str) -> bool:
+        return path_in_scope(self.attach_scope, path)
+
+    def attach(self, scope: str, prog: PolicyProgram) -> None:
+        self.prog = prog
+        self.attach_scope = scope
+        self._decide = None
+        self._rows = {p: (prog.default_row() if self._in_scope(p)
+                          else prog.neutral_row())
+                      for p in self.tree._index}
+
+    def update_params(self, path: str, kv: dict) -> None:
+        cols = {self.prog.col(k): float(v) for k, v in kv.items()}
+        for p in self.tree._index:
+            if path_in_scope(path, p):
+                for c, v in cols.items():
+                    self._rows[p][c] = v
+
+    def _decide_fn(self):
+        if self._decide is None:
+            import jax
+            prog = self.prog
+            self._decide = jax.jit(
+                lambda view, req: charge_decision(prog, view, req))
+        return self._decide
 
     # lifecycle
     def mkdir(self, path: str, spec: DomainSpec) -> int:
@@ -137,6 +201,14 @@ class HostTreeBackend:
         self._next_id += 1
         self._ids[path] = h
         self._paths[h] = path
+        parent = parent_path(path)
+        if not self._in_scope(path):
+            row = self.prog.neutral_row()
+        elif self._in_scope(parent):
+            row = self._rows[parent].copy()   # settings propagate down
+        else:
+            row = self.prog.default_row()
+        self._rows[path] = row
         return h
 
     def rmdir(self, path: str, transfer_residual: bool) -> int:
@@ -146,6 +218,7 @@ class HostTreeBackend:
         if transfer_residual and residual and parent is not None:
             self.charge_unchecked(parent, residual)
         self._paths.pop(self._ids.pop(path), None)
+        self._rows.pop(path, None)
         return residual
 
     def exists(self, path: str) -> bool:
@@ -163,10 +236,64 @@ class HostTreeBackend:
     # charging
     def try_charge(self, path: str, pages: int,
                    step: Optional[int]) -> ChargeTicket:
-        res = self.tree.try_charge(path, pages)
-        return ChargeTicket(granted=res.ok, stalled=not res.ok,
-                            blocked_by=res.blocked_by,
-                            over_high=res.over_high)
+        import jax.numpy as jnp
+        d = self.tree.get(path)
+        step_mode = step is not None
+        clock = step if step_mode else self.tree.now_ms
+        chain = list(d.ancestors())
+        n = len(chain)
+        view = ChainView(
+            valid=jnp.ones((n,), bool),
+            usage=jnp.asarray([a.usage for a in chain], jnp.int32),
+            high=jnp.asarray([a.high for a in chain], jnp.int32),
+            max=jnp.asarray([a.max for a in chain], jnp.int32),
+            low=jnp.asarray([a.low for a in chain], jnp.int32),
+            frozen=jnp.asarray([a.frozen or a.killed for a in chain], bool),
+            throttle_until=jnp.asarray([a.throttle_until for a in chain],
+                                       jnp.float32),
+            priority=jnp.int32(d.priority),
+            params=jnp.asarray(self._rows[path], jnp.float32),
+        )
+        req = Request(jnp.int32(self._ids[path] % (1 << 30)),
+                      jnp.int32(pages),
+                      jnp.int32(clock) if step_mode else jnp.float32(clock))
+        verdict, delay_ms, throttle = self._decide_fn()(view, req)
+        self._rows[path] = np.array(verdict.params)     # writable copy
+
+        # ``delay_ms`` on the ticket = the throttle window now pending on
+        # the charged domain, in ms — the device backends' convention
+        # (quantized on the step clock, exact on the ms clock)
+        def window() -> float:
+            w = max(0.0, d.throttle_until - clock)
+            return w * self.prog.step_ms if step_mode else w
+
+        if not bool(verdict.grant):
+            if d.frozen or d.killed:
+                return ChargeTicket(False, True, blocked_by=path,
+                                    delay_ms=window())
+            blk = self.tree.blocking_ancestor(d, pages)
+            if blk is not None:           # hard-max denial: memcg counters
+                self.tree.note_max_breach(blk, pages)
+                return ChargeTicket(False, True, blocked_by=blk.name,
+                                    delay_ms=window())
+            # active throttle window or program admission (token bucket)
+            return ChargeTicket(False, True, blocked_by=path,
+                                delay_ms=window())
+
+        over = self.tree.commit_charge(d, pages)
+        dly_ms = float(delay_ms)
+        if bool(throttle) and dly_ms > 0:
+            if step_mode:                 # quantized, like the device table
+                deadline = clock + int(np.ceil(
+                    np.float32(dly_ms) / np.float32(self.prog.step_ms)))
+            else:
+                deadline = clock + dly_ms
+            d.throttle_until = max(d.throttle_until, deadline)
+            d.n_throttle += 1
+            self.log.emit(self.tree.now_ms, Ev.THROTTLE, path,
+                          delay_ms=dly_ms)
+        return ChargeTicket(True, False, over_high=over,
+                            delay_ms=window())
 
     def uncharge(self, path: str, pages: int) -> None:
         self.tree.uncharge(path, pages)
@@ -238,8 +365,12 @@ class HostTreeBackend:
         parent = np.array([prow.get(parent_path(p), -1) if p != "/" else -1
                            for p in order], np.int64)
         active = np.ones(len(order), bool)
+        params = np.stack([self._rows[p] for p in order])
         return {"paths": order, "index": prow, "usage": usage, "high": high,
                 "max": maxl, "parent": parent, "active": active,
+                "params": params,
+                "throttle_until": np.array([idx[p].throttle_until
+                                            for p in order]),
                 "root_usage": self.tree.root.usage}
 
     def set_time(self, t: float) -> None:
@@ -263,10 +394,17 @@ class DeviceView:
     def state(self) -> dict:
         return self._backend.table.state
 
+    @property
+    def prog(self) -> PolicyProgram:
+        """The attached program (read at trace time, so a re-jit after
+        ``attach`` picks up the new decision code)."""
+        return self._backend.table.prog
+
     def charge(self, state, dom, amt, step):
-        """In-step hierarchical charge: (state, granted, stalled)."""
+        """In-step hierarchical charge: (state, granted, stalled) —
+        dispatched into the attached program."""
         from repro.core import controller as C
-        return C.charge_batch(state, dom, amt, step, self.cfg)
+        return C.charge_batch(state, dom, amt, step, self.prog)
 
     def account(self, state, dom, amt):
         """Post-hoc unconditional charge (the user-space baseline:
@@ -279,9 +417,9 @@ class DeviceView:
         return C.uncharge_batch(state, dom, amt)
 
     def gate(self, state, dom, step):
-        """Per-slot advance gate (no frozen/throttled ancestor)."""
+        """Per-slot advance gate (the program's ``on_gate``)."""
         from repro.core import controller as C
-        return C.slot_gate(state, dom, step)
+        return C.slot_gate(state, dom, step, self.prog)
 
     def commit(self, state: dict) -> None:
         """Adopt the (possibly donated) post-step state."""
@@ -298,16 +436,27 @@ class DeviceTableBackend:
     """
 
     def __init__(self, capacity: int, n_domains: int = 64, cfg=None,
-                 log: Optional[EventLog] = None):
+                 log: Optional[EventLog] = None,
+                 prog: Optional[PolicyProgram] = None):
         from repro.core.controller import ControllerConfig, DeviceDomainTable
         self.table = DeviceDomainTable(capacity, n_domains,
-                                       cfg or ControllerConfig())
+                                       cfg or ControllerConfig(), prog)
         self.log = log if log is not None else EventLog()
         self._now = 0.0
 
     @property
     def n_domains(self) -> int:
         return self.table.n
+
+    @property
+    def prog(self) -> PolicyProgram:
+        return self.table.prog
+
+    def attach(self, scope: str, prog: PolicyProgram) -> None:
+        self.table.attach(scope, prog)
+
+    def update_params(self, path: str, kv: dict) -> None:
+        self.table.update_params(self._subtree(path), kv)
 
     def device_view(self) -> DeviceView:
         return DeviceView(self)
@@ -356,10 +505,12 @@ class DeviceTableBackend:
         idx = self.table.index[path]
         st, granted, stalled = C.charge_batch(
             self.table.state, jnp.array([idx], jnp.int32),
-            jnp.array([pages], jnp.int32), step, self.table.cfg)
+            jnp.array([pages], jnp.int32), step, self.table.prog)
         self.table.state = st
+        window = max(0, int(st["throttle_until"][idx]) - step)
         return ChargeTicket(granted=bool(granted[0]),
-                            stalled=bool(stalled[0]))
+                            stalled=bool(stalled[0]),
+                            delay_ms=window * self.table.prog.step_ms)
 
     def uncharge(self, path: str, pages: int) -> None:
         import jax.numpy as jnp
@@ -376,8 +527,7 @@ class DeviceTableBackend:
 
     # subtree control
     def _subtree(self, path: str) -> list[str]:
-        return [p for p in self.table.index
-                if p == path or p.startswith(path.rstrip("/") + "/")]
+        return [p for p in self.table.index if path_in_scope(path, p)]
 
     def freeze(self, path: str) -> None:
         for p in self._subtree(path):
@@ -447,6 +597,7 @@ class DeviceTableBackend:
                 "parent": np.asarray(st["parent"]),
                 "active": np.asarray(st["active"]),
                 "throttle_until": np.asarray(st["throttle_until"]),
+                "params": np.asarray(st["prog"]),
                 "root_usage": int(st["usage"][0])}
 
     def set_time(self, t: float) -> None:
@@ -574,6 +725,30 @@ class AgentCgroup:
 
     def path_of(self, handle: int) -> str:
         return self.backend.path_of(handle)
+
+    # ------------------------------------------------------------- programs
+
+    @property
+    def program(self) -> PolicyProgram:
+        """The attached enforcement program (memcg_bpf_ops analogue)."""
+        return self.backend.prog
+
+    def attach(self, path: str, prog: PolicyProgram) -> None:
+        """Attach a ``PolicyProgram`` to the subtree at ``path`` — the
+        BPF-attach analogue.  Swaps the decision code every backend
+        dispatches into; domains outside the subtree run the program's
+        neutral parameters (the memcg contract still applies to them).
+        Jitted consumers must re-trace (``Engine.attach_program`` does).
+        """
+        assert path == "/" or self.backend.exists(path), path
+        self.backend.attach(path, prog)
+
+    def update_params(self, path: str, **kv) -> None:
+        """Retune the live program for the subtree at ``path`` — a BPF
+        map write: pure state, takes effect next charge, never a
+        recompile.  Keys must name columns of ``program.param_names``.
+        """
+        self.backend.update_params(path, kv)
 
     # --------------------------------------------------------- control files
 

@@ -10,10 +10,19 @@ it occurs — no host round trip.  The host-side daemon (serving engine /
 the shared state arrays, exactly like the paper's "lightweight
 user-space daemon managing cgroup lifecycle via shared BPF maps".
 
+The decision logic itself is NOT in this file: ``charge_batch`` and
+``slot_gate`` are thin kernels that build a per-request ``ChainView``
+and dispatch into the attached ``PolicyProgram`` (``core/progs.py``) —
+the memcg_bpf_ops analogue.  The program's parameter table rides in the
+state pytree under ``"prog"``, so retuning a live policy is a state
+update (no retrace); attaching a different program swaps the traced
+code (a recompile, like loading a new BPF object).
+
 State layout (fixed capacity ``n``; index 0 is the root):
   usage/high/max/low : i32 pages          parent : i32 (-1 for root)
   priority           : i32 (0/1/2)        frozen : bool
   throttle_until     : i32 engine step    peak   : i32
+  prog               : f32 (n, P) program parameter table
 
 ``charge_batch`` serializes grants within a step via ``lax.scan`` —
 the same serialization the memcg page-counter hierarchy applies — so
@@ -22,6 +31,7 @@ results are deterministic and order-faithful.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from dataclasses import dataclass
 from typing import Optional
 
@@ -30,6 +40,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import domains as D
+from repro.core.progs import (ChainView, PolicyProgram, Request, as_program,
+                              charge_decision, path_in_scope)
 
 UNLIMITED = D.UNLIMITED
 DEPTH = 4          # root / tenant / session / tool-call
@@ -37,15 +49,20 @@ DEPTH = 4          # root / tenant / session / tool-call
 
 @dataclass(frozen=True)
 class ControllerConfig:
+    """Scalar knobs for the stock graduated-throttle program.  The
+    defaults single-source from ``domains`` — the same constants the
+    host tree's reference ``throttle_delay_ms`` uses."""
     step_ms: float = 10.0             # engine-step duration the delays quantize to
-    base_delay_ms: float = 10.0
-    max_delay_ms: float = 2000.0
-    high_priority_discount: float = 0.1
-    overage_gain: float = 10.0
+    base_delay_ms: float = D.BASE_DELAY_MS
+    max_delay_ms: float = D.MAX_DELAY_MS
+    high_priority_discount: float = D.HIGH_PRIORITY_DISCOUNT
+    overage_gain: float = D.OVERAGE_GAIN
 
 
-def new_state(capacity_pages: int, n_domains: int = 64) -> dict:
+def new_state(capacity_pages: int, n_domains: int = 64,
+              prog: Optional[PolicyProgram] = None) -> dict:
     """Fresh device state with only the root (index 0) configured."""
+    prog = as_program(prog)
     n = n_domains
     st = {
         "usage": jnp.zeros((n,), jnp.int32),
@@ -58,6 +75,7 @@ def new_state(capacity_pages: int, n_domains: int = 64) -> dict:
         "active": jnp.zeros((n,), bool),
         "throttle_until": jnp.zeros((n,), jnp.int32),
         "peak": jnp.zeros((n,), jnp.int32),
+        "prog": prog.init_params(n),
     }
     st["max"] = st["max"].at[0].set(capacity_pages)
     st["high"] = st["high"].at[0].set(capacity_pages)
@@ -75,19 +93,32 @@ def _ancestor_chain(parent, idx):
     return jnp.stack(chain)
 
 
-def _delay_steps(cfg: ControllerConfig, over_frac, priority, protected):
-    """get_high_delay_ms analogue, quantized to engine steps."""
-    delay_ms = jnp.minimum(cfg.max_delay_ms,
-                           cfg.base_delay_ms * (1.0 + cfg.overage_gain * over_frac))
-    delay_ms = jnp.where(priority == D.HIGH,
-                         delay_ms * cfg.high_priority_discount, delay_ms)
-    delay_ms = jnp.where(protected, 0.0, delay_ms)
-    return jnp.ceil(delay_ms / cfg.step_ms).astype(jnp.int32)
+def _chain_view(state, usage, throttle_until, params, d) -> ChainView:
+    """Masked ancestor-chain view for one request (invalid entries are
+    neutral: usage 0, limits UNLIMITED, not frozen, no throttle)."""
+    chain = _ancestor_chain(state["parent"], jnp.maximum(d, 0))
+    valid = (chain >= 0) & (d >= 0)
+    cidx = jnp.maximum(chain, 0)
+    di = jnp.maximum(d, 0)
+    return ChainView(
+        valid=valid,
+        usage=jnp.where(valid, usage[cidx], 0),
+        high=jnp.where(valid, state["high"][cidx], UNLIMITED),
+        max=jnp.where(valid, state["max"][cidx], UNLIMITED),
+        low=jnp.where(valid, state["low"][cidx], 0),
+        frozen=jnp.where(valid, state["frozen"][cidx], False),
+        throttle_until=jnp.where(valid, throttle_until[cidx], 0),
+        priority=state["priority"][di],
+        params=params[di],
+    )
 
 
 def charge_batch(state: dict, dom: jax.Array, amt: jax.Array, step,
-                 cfg: ControllerConfig = ControllerConfig()):
-    """Hierarchically charge ``amt[i]`` pages to domain ``dom[i]``.
+                 prog=None):
+    """Hierarchically charge ``amt[i]`` pages to domain ``dom[i]``,
+    dispatching every decision into the attached ``PolicyProgram``
+    (``prog`` also accepts a ``ControllerConfig`` for the stock
+    graduated program, or None for defaults).
 
     Returns (new_state, granted (m,) bool, stalled (m,) bool).
     ``stalled`` marks requests denied *because of throttle/freeze* (they
@@ -97,48 +128,41 @@ def charge_batch(state: dict, dom: jax.Array, amt: jax.Array, step,
     step that does not cross a page boundary allocates nothing but must
     still respect cgroup.freeze).
     """
-    def one(carry, req):
-        usage, peak, throttle_until = carry
-        d, a = req
-        valid = d >= 0
-        chain = _ancestor_chain(state["parent"], jnp.maximum(d, 0))
-        cvalid = (chain >= 0) & valid
-        cidx = jnp.maximum(chain, 0)
+    prog = as_program(prog)
 
-        frozen = jnp.any(jnp.where(cvalid, state["frozen"][cidx], False))
-        throttled = jnp.any(jnp.where(cvalid, throttle_until[cidx] > step, False))
-        over_max = jnp.any(jnp.where(cvalid, usage[cidx] + a > state["max"][cidx],
-                                     False))
-        grant = valid & ~frozen & ~throttled & ~over_max
+    def one(carry, req):
+        usage, peak, throttle_until, params = carry
+        d, a = req
+        view = _chain_view(state, usage, throttle_until, params, d)
+        verdict, delay_ms, throttle = charge_decision(
+            prog, view, Request(d, a, step))
+        grant = (d >= 0) & verdict.grant
+        stalled = (d >= 0) & verdict.stall
+
+        chain = _ancestor_chain(state["parent"], jnp.maximum(d, 0))
+        cvalid = (chain >= 0) & (d >= 0)
+        cidx = jnp.maximum(chain, 0)
         add = jnp.where(cvalid & grant, a, 0)
         usage = usage.at[cidx].add(add)
         peak = jnp.maximum(peak, usage)
 
-        # soft-limit breach -> graduated throttle on the charged domain
-        new_usage = jnp.where(cvalid, usage[cidx], 0)
-        high = state["high"][cidx]
-        over = jnp.where(cvalid & (high < UNLIMITED),
-                         new_usage - high, 0)
-        protected = jnp.where(cvalid, new_usage <= state["low"][cidx], True)
-        over_frac = jnp.max(jnp.where(over > 0,
-                                      over / jnp.maximum(high, 1), 0.0))
-        any_over = grant & (over_frac > 0)
-        dly = _delay_steps(cfg, over_frac, state["priority"][jnp.maximum(d, 0)],
-                           jnp.all(protected | (over <= 0)))
-        tu = jnp.where(any_over,
-                       jnp.maximum(throttle_until[jnp.maximum(d, 0)],
-                                   step + dly),
-                       throttle_until[jnp.maximum(d, 0)])
-        throttle_until = throttle_until.at[jnp.maximum(d, 0)].set(
-            jnp.where(valid, tu, throttle_until[jnp.maximum(d, 0)]))
-        stalled = valid & (frozen | throttled | over_max)
-        return (usage, peak, throttle_until), (grant, stalled)
+        di = jnp.maximum(d, 0)
+        dly = jnp.ceil(delay_ms / prog.step_ms).astype(jnp.int32)
+        tu = jnp.where(throttle & (d >= 0),
+                       jnp.maximum(throttle_until[di], step + dly),
+                       throttle_until[di])
+        throttle_until = throttle_until.at[di].set(
+            jnp.where(d >= 0, tu, throttle_until[di]))
+        params = params.at[di].set(
+            jnp.where(d >= 0, verdict.params, params[di]))
+        return (usage, peak, throttle_until, params), (grant, stalled)
 
-    (usage, peak, throttle_until), (granted, stalled) = jax.lax.scan(
-        one, (state["usage"], state["peak"], state["throttle_until"]),
+    (usage, peak, throttle_until, params), (granted, stalled) = jax.lax.scan(
+        one, (state["usage"], state["peak"], state["throttle_until"],
+              state["prog"]),
         (dom.astype(jnp.int32), amt.astype(jnp.int32)))
     new_state = dict(state, usage=usage, peak=peak,
-                     throttle_until=throttle_until)
+                     throttle_until=throttle_until, prog=params)
     return new_state, granted, stalled
 
 
@@ -169,17 +193,15 @@ def uncharge_batch(state: dict, dom: jax.Array, amt: jax.Array):
     return dict(state, usage=jnp.maximum(usage, 0))
 
 
-def slot_gate(state: dict, slot_dom: jax.Array, step) -> jax.Array:
-    """May each slot advance this step?  (no frozen/throttled ancestor)"""
+def slot_gate(state: dict, slot_dom: jax.Array, step, prog=None) -> jax.Array:
+    """May each slot advance this step?  Dispatches ``on_gate`` of the
+    attached program (default: no frozen/throttled ancestor)."""
+    prog = as_program(prog)
+
     def one(d):
-        chain = _ancestor_chain(state["parent"], jnp.maximum(d, 0))
-        cvalid = (chain >= 0) & (d >= 0)
-        cidx = jnp.maximum(chain, 0)
-        frozen = jnp.any(jnp.where(cvalid, state["frozen"][cidx], False))
-        throttled = jnp.any(jnp.where(cvalid,
-                                      state["throttle_until"][cidx] > step,
-                                      False))
-        return (d >= 0) & ~frozen & ~throttled
+        view = _chain_view(state, state["usage"], state["throttle_until"],
+                           state["prog"], d)
+        return (d >= 0) & prog.on_gate(view, step)
     return jax.vmap(one)(slot_dom.astype(jnp.int32))
 
 
@@ -190,24 +212,69 @@ class DeviceDomainTable:
     """Host-side index allocator + lifecycle editor for the device state.
 
     This is the paper's 'lightweight user-space daemon': it creates and
-    removes domains, configures limits, freezes/thaws — but the per-
-    allocation enforcement runs on device inside the jitted step.
+    removes domains, configures limits, freezes/thaws, attaches and
+    retunes the policy program — but the per-allocation enforcement runs
+    on device inside the jitted step.
     """
 
     def __init__(self, capacity_pages: int, n_domains: int = 64,
-                 cfg: ControllerConfig = ControllerConfig()):
+                 cfg: ControllerConfig = ControllerConfig(),
+                 prog: Optional[PolicyProgram] = None):
         self.cfg = cfg
         self.n = n_domains
-        self.state = new_state(capacity_pages, n_domains)
+        self.prog = prog if prog is not None else as_program(cfg)
+        self.attach_scope = "/"
+        self.state = new_state(capacity_pages, n_domains, self.prog)
         self.index: dict[str, int] = {"/": 0}
-        self._free = list(range(1, n_domains))
+        self._free = list(range(1, n_domains))   # heap: lowest index first
+
+    # ------------------------------------------------------------ programs
+
+    def in_scope(self, path: str) -> bool:
+        return path_in_scope(self.attach_scope, path)
+
+    def attach(self, scope: str, prog: PolicyProgram) -> None:
+        """Swap the enforcement program (a recompile for jitted consumers
+        — like loading a new BPF object).  Domains inside ``scope`` get
+        the program's default row; domains outside get the neutral row
+        (the contract still applies everywhere)."""
+        self.prog = prog
+        self.attach_scope = scope
+        rows = np.broadcast_to(prog.neutral_row(),
+                               (self.n, prog.n_params)).copy()
+        for path, idx in self.index.items():
+            if self.in_scope(path):
+                rows[idx] = prog.default_row()
+        self.state = dict(self.state, prog=jnp.asarray(rows))
+
+    def update_params(self, paths: list, kv: dict) -> None:
+        """Retune the live program for the given domains — a pure state
+        write, never a retrace."""
+        cols = {self.prog.col(k): float(v) for k, v in kv.items()}
+        idxs = jnp.asarray([self.index[p] for p in paths], jnp.int32)
+        prog = self.state["prog"]
+        for c, v in cols.items():
+            prog = prog.at[idxs, c].set(v)
+        self.state = dict(self.state, prog=prog)
+
+    def _fresh_row(self, path: str, pidx: int) -> np.ndarray:
+        """New domains inherit their parent's live row (cgroup settings
+        propagate down) when both sit in the attach scope."""
+        if not self.in_scope(path):
+            return self.prog.neutral_row()
+        parent_path = path.rsplit("/", 1)[0] or "/"
+        if self.in_scope(parent_path):
+            return np.asarray(self.state["prog"][pidx])
+        return self.prog.default_row()
+
+    # ------------------------------------------------------------ lifecycle
 
     def create(self, path: str, *, high: int = UNLIMITED, max: int = UNLIMITED,
                low: int = 0, priority: int = D.NORMAL) -> int:
         assert path not in self.index, path
         parent_path = path.rsplit("/", 1)[0] or "/"
         pidx = self.index[parent_path]
-        idx = self._free.pop(0)
+        idx = heapq.heappop(self._free)
         self.index[path] = idx
         st = self.state
         self.state = dict(
@@ -222,6 +289,8 @@ class DeviceDomainTable:
             frozen=st["frozen"].at[idx].set(False),
             active=st["active"].at[idx].set(True),
             throttle_until=st["throttle_until"].at[idx].set(0),
+            prog=st["prog"].at[idx].set(
+                jnp.asarray(self._fresh_row(path, pidx))),
         )
         return idx
 
@@ -237,7 +306,7 @@ class DeviceDomainTable:
         self.state = dict(st, active=st["active"].at[idx].set(False),
                           frozen=st["frozen"].at[idx].set(False),
                           parent=st["parent"].at[idx].set(-1))
-        self._free.append(idx)
+        heapq.heappush(self._free, idx)
 
     def set_frozen(self, path: str, flag: bool) -> None:
         idx = self.index[path]

@@ -35,6 +35,14 @@ UNLIMITED = (1 << 31) - 1          # int32-safe "no limit" sentinel
 # priorities
 LOW, NORMAL, HIGH = 0, 1, 2
 
+# Graduated-throttle defaults (get_high_delay_ms curve) — the single
+# source for ``ControllerConfig``, ``GraduatedThrottleProgram``, and the
+# host tree's reference ``throttle_delay_ms``.
+BASE_DELAY_MS = 10.0
+MAX_DELAY_MS = 2000.0
+OVERAGE_GAIN = 10.0
+HIGH_PRIORITY_DISCOUNT = 0.1
+
 
 @dataclass
 class Domain:
@@ -48,6 +56,10 @@ class Domain:
     peak: int = 0
     frozen: bool = False
     killed: bool = False
+    # program-imposed throttle deadline (clock units of the caller —
+    # see HostTreeBackend.try_charge); DomainTree itself never gates on
+    # it, the attached PolicyProgram does
+    throttle_until: float = 0.0
     children: dict = field(default_factory=dict)
     # event counters (memory.events analogue)
     n_high_breach: int = 0
@@ -130,20 +142,27 @@ class DomainTree:
 
     # ------------------------------------------------------------- charging
 
-    def try_charge(self, path: str, pages: int) -> ChargeResult:
-        """Atomic hierarchical charge (memcg try_charge contract)."""
-        d = self._index[path]
-        if d.frozen or d.killed:
-            return ChargeResult(False, blocked_by=path)
-        chain = list(d.ancestors())
-        for a in chain:
+    def blocking_ancestor(self, d: Domain, pages: int) -> Optional[Domain]:
+        """First (self-first) ancestor whose ``max`` the charge would
+        cross, or None."""
+        for a in d.ancestors():
             if a.usage + pages > a.max:
-                a.n_max_breach += 1
-                self.log.emit(self.now_ms, Ev.MAX_BREACH, a.name,
-                              want=pages, usage=a.usage, max=a.max)
-                return ChargeResult(False, blocked_by=a.name)
+                return a
+        return None
+
+    def note_max_breach(self, a: Domain, pages: int) -> None:
+        """memcg event bookkeeping for a hard-``max`` denial."""
+        a.n_max_breach += 1
+        self.log.emit(self.now_ms, Ev.MAX_BREACH, a.name,
+                      want=pages, usage=a.usage, max=a.max)
+
+    def commit_charge(self, d: Domain, pages: int) -> tuple:
+        """Commit a granted charge up the chain: usage/peak plus the
+        ``high``-breach counters and event.  Returns the over-``high``
+        domain names.  Shared by ``try_charge`` and the program-driven
+        ``HostTreeBackend`` — one copy of the memcg bookkeeping."""
         over = []
-        for a in chain:
+        for a in d.ancestors():
             a.usage += pages
             a.peak = max(a.peak, a.usage)
             if a.usage > a.high:
@@ -152,7 +171,18 @@ class DomainTree:
         if over:
             self.log.emit(self.now_ms, Ev.HIGH_BREACH, over[0],
                           domains=tuple(over), want=pages)
-        return ChargeResult(True, over_high=tuple(over))
+        return tuple(over)
+
+    def try_charge(self, path: str, pages: int) -> ChargeResult:
+        """Atomic hierarchical charge (memcg try_charge contract)."""
+        d = self._index[path]
+        if d.frozen or d.killed:
+            return ChargeResult(False, blocked_by=path)
+        blk = self.blocking_ancestor(d, pages)
+        if blk is not None:
+            self.note_max_breach(blk, pages)
+            return ChargeResult(False, blocked_by=blk.name)
+        return ChargeResult(True, over_high=self.commit_charge(d, pages))
 
     def uncharge(self, path: str, pages: int) -> None:
         self._uncharge_from(self._index[path], pages)
@@ -195,8 +225,9 @@ class DomainTree:
     def usage(self, path: str = "/") -> int:
         return self._index[path].usage
 
-    def throttle_delay_ms(self, path: str, *, base_delay_ms: float = 10.0,
-                          max_delay_ms: float = 2000.0) -> float:
+    def throttle_delay_ms(self, path: str, *,
+                          base_delay_ms: float = BASE_DELAY_MS,
+                          max_delay_ms: float = MAX_DELAY_MS) -> float:
         """get_high_delay_ms analogue: graduated delay for over-``high``
         domains, scaled by relative overage, respecting ``low``
         protection and priority."""
@@ -208,10 +239,11 @@ class DomainTree:
             if a.protected:
                 continue
             over = (a.usage - a.high) / max(a.high, 1)
-            delay = min(max_delay_ms, base_delay_ms * (1.0 + 10.0 * over))
+            delay = min(max_delay_ms,
+                        base_delay_ms * (1.0 + OVERAGE_GAIN * over))
             worst = max(worst, delay)
         if worst and d.priority == HIGH:
-            worst *= 0.1            # latency-sensitive domains barely stall
+            worst *= HIGH_PRIORITY_DISCOUNT   # latency-sensitive domains barely stall
         if worst:
             d.n_throttle += 1
             self.log.emit(self.now_ms, Ev.THROTTLE, path, delay_ms=worst)

@@ -22,6 +22,13 @@ Policies drive the unified ``AgentCgroup`` control plane owned by the
 simulator (``sim.cg`` — ``core/cgroup.py``), never a raw tree; the
 simulator provides the allocation-latency physics (reclaim costs) and
 calls back on tool-span boundaries and ticks.
+
+Since the ``PolicyProgram`` redesign the per-allocation *decision*
+(grant / deny / graduated delay) is no longer computed here: it runs in
+the program attached to ``sim.cg`` — the same code the device backends
+trace — and arrives on the ``ChargeTicket``.  What stays host-side is
+exactly the paper's user-space daemon work: domain lifecycle, limit
+sizing, kill/freeze selection, and the intent channel.
 """
 from __future__ import annotations
 
@@ -34,6 +41,7 @@ from repro.core import domains as D
 from repro.core.cgroup import DomainSpec
 from repro.core.intent import (AdaptiveAgentModel, CATEGORY_HINT, Feedback,
                                hint_to_high)
+from repro.core.progs import PolicyProgram
 
 
 @dataclass
@@ -215,22 +223,25 @@ class AgentCgroupPolicy(BasePolicy):
 
     def __init__(self, *, session_high: Optional[dict] = None,
                  use_intent: bool = True,
-                 base_delay_ms: float = 10.0, max_delay_ms: float = 2000.0,
                  freeze_threshold: float = 0.97, thaw_threshold: float = 0.80,
                  hard_patience_ms: float = 150.0,
-                 agent_model: Optional[AdaptiveAgentModel] = None):
+                 agent_model: Optional[AdaptiveAgentModel] = None,
+                 program: Optional[PolicyProgram] = None):
+        # graduated-throttle constants live in the attached program
+        # (domains.BASE_DELAY_MS etc. by default) — not duplicated here
         self.session_high = session_high or {}
         self.use_intent = use_intent
-        self.base_delay_ms = base_delay_ms
-        self.max_delay_ms = max_delay_ms
         self.freeze_threshold = freeze_threshold
         self.thaw_threshold = thaw_threshold
         self.hard_patience_ms = hard_patience_ms
         self.agent_model = agent_model or AdaptiveAgentModel()
+        self.program = program
         self._lease: dict = {}          # task.key -> open tool Lease
         self._tool_seq = 0
 
     def setup(self, sim, tasks) -> None:
+        if self.program is not None:
+            sim.cg.attach("/", self.program)
         for t in tasks:
             # session_high keyed by task_id (paper: LOW sessions get
             # memory.high = 400 MB, HIGH gets memory.high = max)
@@ -280,11 +291,10 @@ class AgentCgroupPolicy(BasePolicy):
         path = self.charge_path(sim, task)
         ticket = sim.cg.try_charge(path, mb)
         if ticket.granted:
-            delay = 0.0
-            if ticket.over_high:
-                delay = sim.cg.throttle_delay_ms(
-                    path, base_delay_ms=self.base_delay_ms,
-                    max_delay_ms=self.max_delay_ms)
+            # graduated delay comes straight off the ticket — computed
+            # by the attached program, the same decision code the
+            # device backends run in-step
+            delay = ticket.delay_ms
             # below_low protection: the HIGH session's allocations skip
             # direct reclaim — sibling throttling did the work already
             sess = self.domain_for(task)

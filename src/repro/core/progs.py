@@ -1,0 +1,296 @@
+"""Pluggable in-step policy programs — the memcg_bpf_ops analogue.
+
+The paper's responsiveness and adaptability fixes hinge on enforcement
+logic that is *attachable* and *runtime-updatable* at the kernel charge
+point (memcg_bpf_ops / sched_ext struct_ops).  The repo's analogue is a
+``PolicyProgram``: a small object of pure, JAX-traceable hooks
+
+    on_charge(view, req)   -> Verdict          (the try_charge verdict)
+    on_over_high(view, req, over_frac, protected) -> delay_ms
+    on_gate(view, step)    -> may-advance bool (the slot gate)
+
+closed over a flat device-resident parameter table ``(n_domains, P)``
+f32 — one row per domain, columns named by ``param_names``.  The table
+is *state*, not a trace constant: it rides inside the control-state
+pytree (key ``"prog"``), so the host daemon can retune a live policy
+(``cg.update_params(path, overage_gain=...)``) between two jitted
+engine steps with zero recompilation — exactly how a BPF map update
+retunes a loaded program without reloading it.  Attaching a *different*
+program (``cg.attach(path, prog)``) swaps the decision code and does
+recompile, like loading a new BPF object.
+
+Every backend executes the SAME decision code:
+
+  * the device table runs ``charge_decision`` inside ``lax.scan`` in the
+    jitted engine step (``controller.charge_batch``);
+  * the sharded table runs the identical kernel per shard under
+    ``shard_map``;
+  * the host tree calls the identical ``charge_decision`` (jit-compiled
+    once per program) from ``HostTreeBackend.try_charge`` — so the
+    trace-replay simulator and the serving engine can no longer drift.
+
+The memcg *contract* (hierarchical hard ``max``, cgroup.freeze, atomic
+commit) is enforced by the default ``on_charge`` and is what programs
+normally build on; a program may also tighten it (``TokenBucketProgram``
+denies what the contract alone would grant) — mirroring how BPF hooks
+refine, not replace, kernel invariants.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import domains as D
+from repro.core.domains import (BASE_DELAY_MS, HIGH_PRIORITY_DISCOUNT,
+                                MAX_DELAY_MS, OVERAGE_GAIN, UNLIMITED)
+
+
+def path_in_scope(scope: str, path: str) -> bool:
+    """Is ``path`` inside the subtree rooted at ``scope``?  The single
+    prefix rule every backend uses for attach scoping and subtree
+    parameter writes."""
+    return (scope == "/" or path == scope
+            or path.startswith(scope.rstrip("/") + "/"))
+
+
+class Request(NamedTuple):
+    """One charge attempt, as seen by a program hook."""
+    dom: jax.Array        # charged domain handle (i32 scalar)
+    amt: jax.Array        # pages requested (i32 scalar)
+    step: jax.Array       # throttle clock (i32 steps in-step; ms host-side)
+
+
+class ChainView(NamedTuple):
+    """The charged domain's ancestor chain (self-first), padded/masked so
+    invalid entries are neutral (usage 0, limits UNLIMITED, not frozen).
+    ``params`` is the charged domain's program row."""
+    valid: jax.Array            # (depth,) bool
+    usage: jax.Array            # (depth,) i32 — pre-charge
+    high: jax.Array             # (depth,) i32
+    max: jax.Array              # (depth,) i32
+    low: jax.Array              # (depth,) i32
+    frozen: jax.Array           # (depth,) bool
+    throttle_until: jax.Array   # (depth,) i32/f32, same clock as req.step
+    priority: jax.Array         # i32 scalar — the charged domain's
+    params: jax.Array           # (P,) f32 — the charged domain's row
+
+
+class Verdict(NamedTuple):
+    """What ``on_charge`` decides.  ``stall`` marks retryable denials
+    (freeze / throttle / hard max / program admission).  ``params`` is
+    the possibly-updated program row for the charged domain — programs
+    with per-domain mutable state (token buckets) write it back here."""
+    grant: jax.Array            # bool scalar
+    stall: jax.Array            # bool scalar
+    delay_ms: jax.Array         # f32 scalar — program-imposed extra delay
+    params: jax.Array           # (P,) f32
+
+
+class PolicyProgram:
+    """Base program: the bare memcg contract, no throttling.
+
+    Subclasses override hooks and declare ``param_names``.  Hooks must
+    stay pure and JAX-traceable (``jnp``/``lax`` ops only, no python
+    control flow on traced values) — the same callable runs inside the
+    jitted engine step, under ``shard_map``, and host-side.
+    """
+
+    param_names: tuple = ()
+    step_ms: float = 10.0        # delay quantum (trace constant)
+
+    # ------------------------------------------------------- param table
+
+    @property
+    def n_params(self) -> int:
+        return max(1, len(self.param_names))    # keep (n, P) well-formed
+
+    def default_row(self) -> np.ndarray:
+        """Row for domains inside the attach scope."""
+        return np.zeros((self.n_params,), np.float32)
+
+    def neutral_row(self) -> np.ndarray:
+        """Row for domains *outside* the attach scope: the program's
+        parameterized behaviour must be a no-op there (the contract
+        still applies everywhere)."""
+        return np.zeros((self.n_params,), np.float32)
+
+    def init_params(self, n_domains: int) -> jnp.ndarray:
+        return jnp.broadcast_to(
+            jnp.asarray(self.default_row(), jnp.float32),
+            (n_domains, self.n_params))
+
+    def col(self, name: str) -> int:
+        try:
+            return self.param_names.index(name)
+        except ValueError:
+            raise KeyError(
+                f"{type(self).__name__} has no param {name!r}; "
+                f"knobs: {self.param_names}") from None
+
+    # ------------------------------------------------------------- hooks
+
+    def on_charge(self, view: ChainView, req: Request) -> Verdict:
+        """The memcg try_charge contract: deny on a frozen ancestor, an
+        active throttle window, or a hierarchical hard-``max`` breach;
+        all denials are retryable stalls (the engine's graceful-
+        degradation path never OOM-kills in-step)."""
+        frozen = jnp.any(view.valid & view.frozen)
+        throttled = jnp.any(view.valid & (view.throttle_until > req.step))
+        over_max = jnp.any(view.valid & (view.usage + req.amt > view.max))
+        deny = frozen | throttled | over_max
+        return Verdict(~deny, deny, jnp.float32(0.0), view.params)
+
+    def on_over_high(self, view: ChainView, req: Request, over_frac,
+                     protected) -> jax.Array:
+        """Delay (ms, f32) to impose on the charged domain after a
+        granted charge breached ``high`` — get_high_delay_ms.  ``view``
+        carries POST-charge usage.  Default: no throttling."""
+        return jnp.float32(0.0)
+
+    def on_gate(self, view: ChainView, step) -> jax.Array:
+        """May a slot in this domain advance this step?  Default: no
+        frozen or throttled ancestor (cgroup.freeze + active delay)."""
+        frozen = jnp.any(view.valid & view.frozen)
+        throttled = jnp.any(view.valid & (view.throttle_until > step))
+        return ~frozen & ~throttled
+
+    # ------------------------------------------------- host-daemon helper
+
+    def delay_ms(self, params, over_frac, priority=None, protected=False):
+        """Scalar delay math on one param row — shared by ``on_over_high``
+        and host daemons computing the same curve from telemetry."""
+        return jnp.float32(0.0)
+
+
+def charge_decision(prog: PolicyProgram, view: ChainView, req: Request):
+    """The complete per-request decision, shared verbatim by every
+    backend: contract + program verdict, then post-charge soft-limit
+    math routed through ``on_over_high``.
+
+    Returns ``(verdict, delay_ms, throttle)`` where ``throttle`` says
+    whether a window must be imposed on the charged domain
+    (``throttle_until = max(old, now + quantize(delay_ms))``).
+    """
+    v = prog.on_charge(view, req)
+    add = jnp.where(v.grant, req.amt, 0)
+    new_usage = jnp.where(view.valid, view.usage + add, 0)
+    over = jnp.where(view.valid & (view.high < UNLIMITED),
+                     new_usage - view.high, 0)
+    protected = jnp.where(view.valid, new_usage <= view.low, True)
+    over_frac = jnp.max(jnp.where(over > 0,
+                                  over / jnp.maximum(view.high, 1), 0.0))
+    post = view._replace(usage=new_usage)
+    dly = prog.on_over_high(post, req, over_frac,
+                            jnp.all(protected | (over <= 0)))
+    dly = jnp.maximum(jnp.asarray(dly, jnp.float32), v.delay_ms)
+    throttle = v.grant & ((over_frac > 0) | (v.delay_ms > 0))
+    return v, dly, throttle
+
+
+def as_program(prog_or_cfg) -> PolicyProgram:
+    """Normalize the enforcement argument: a program passes through, a
+    ``ControllerConfig`` (or None) becomes the stock graduated-throttle
+    program with matching scalars."""
+    if prog_or_cfg is None:
+        return GraduatedThrottleProgram()
+    if isinstance(prog_or_cfg, PolicyProgram):
+        return prog_or_cfg
+    return GraduatedThrottleProgram.from_config(prog_or_cfg)
+
+
+# ----------------------------------------------------------- stock programs
+
+
+class GraduatedThrottleProgram(PolicyProgram):
+    """The paper's graduated allocator delay (§5): over-``high`` domains
+    get ``min(max_delay, base_delay * (1 + gain * overage))`` ms, HIGH
+    priority pays a discount, below-``low`` protection zeroes it.  All
+    four knobs are per-domain table columns — retunable live."""
+
+    param_names = ("base_delay_ms", "max_delay_ms", "overage_gain",
+                   "high_priority_discount")
+
+    def __init__(self, *, step_ms: float = 10.0,
+                 base_delay_ms: float = BASE_DELAY_MS,
+                 max_delay_ms: float = MAX_DELAY_MS,
+                 overage_gain: float = OVERAGE_GAIN,
+                 high_priority_discount: float = HIGH_PRIORITY_DISCOUNT):
+        self.step_ms = step_ms
+        self._defaults = (base_delay_ms, max_delay_ms, overage_gain,
+                          high_priority_discount)
+
+    @classmethod
+    def from_config(cls, cfg) -> "GraduatedThrottleProgram":
+        return cls(step_ms=cfg.step_ms, base_delay_ms=cfg.base_delay_ms,
+                   max_delay_ms=cfg.max_delay_ms,
+                   overage_gain=cfg.overage_gain,
+                   high_priority_discount=cfg.high_priority_discount)
+
+    def default_row(self) -> np.ndarray:
+        return np.asarray(self._defaults, np.float32)
+
+    def delay_ms(self, params, over_frac, priority=None, protected=False):
+        d = jnp.minimum(params[1], params[0] * (1.0 + params[2] * over_frac))
+        if priority is not None:
+            d = jnp.where(priority == D.HIGH, d * params[3], d)
+        return jnp.where(protected, 0.0, d)
+
+    def on_over_high(self, view, req, over_frac, protected):
+        return self.delay_ms(view.params, over_frac, view.priority, protected)
+
+
+class TokenBucketProgram(GraduatedThrottleProgram):
+    """Per-priority token-bucket admission on top of the graduated
+    throttle: a domain with a configured bucket may only charge pages
+    covered by accumulated tokens, refilled every step at a rate picked
+    by the domain's priority.  This is *rate* control — pages per step —
+    which the overage-delay curve cannot express (it only reacts to
+    standing usage), the kind of scenario the pluggable surface exists
+    for.  ``bucket_capacity == 0`` (the neutral row) disables the bucket
+    for that domain; the memcg contract still applies everywhere.
+
+    Mutable per-domain state (the bucket level, the last refill step)
+    lives in the same param table the knobs do, written back through
+    ``Verdict.params`` — a BPF map used as both config and scratch.
+    """
+
+    param_names = GraduatedThrottleProgram.param_names + (
+        "bucket_level", "bucket_last_step", "bucket_capacity",
+        "refill_low", "refill_normal", "refill_high")
+
+    def __init__(self, *, bucket_capacity: float = 0.0,
+                 refill: Sequence[float] = (1.0, 2.0, 4.0), **kw):
+        super().__init__(**kw)
+        self.bucket_capacity = float(bucket_capacity)
+        self.refill = tuple(float(r) for r in refill)
+
+    def default_row(self) -> np.ndarray:
+        base = super().default_row()
+        bucket = np.asarray(
+            [self.bucket_capacity, 0.0, self.bucket_capacity] +
+            list(self.refill), np.float32)
+        return np.concatenate([base, bucket])
+
+    # neutral_row: the base all-zeros row — outside the attach scope
+    # BOTH the bucket (capacity 0) and the graduated delays are off
+
+    def on_charge(self, view, req):
+        base = super().on_charge(view, req)
+        p = view.params
+        cap = p[6]
+        enabled = cap > 0
+        dt = jnp.maximum(jnp.asarray(req.step, jnp.float32) - p[5], 0.0)
+        refill = jnp.where(view.priority == D.HIGH, p[9],
+                           jnp.where(view.priority == D.NORMAL, p[8], p[7]))
+        level = jnp.minimum(cap, p[4] + dt * refill)
+        have = level >= req.amt
+        grant = base.grant & (~enabled | have)
+        level = jnp.where(grant & enabled, level - req.amt, level)
+        newp = p.at[4].set(level).at[5].set(jnp.asarray(req.step, jnp.float32))
+        return Verdict(grant,
+                       base.stall | (base.grant & enabled & ~have),
+                       base.delay_ms,
+                       jnp.where(enabled, newp, p))

@@ -33,6 +33,7 @@ what the cross-backend parity sequence replays).
 """
 from __future__ import annotations
 
+import heapq
 from typing import Optional
 
 import jax
@@ -45,14 +46,16 @@ from repro.core import controller as C
 from repro.core import domains as D
 from repro.core.cgroup import ChargeTicket, DomainSpec, parent_path
 from repro.core.events import Ev, EventLog
+from repro.core.progs import PolicyProgram, as_program, path_in_scope
 
 UNLIMITED = D.UNLIMITED
 
 
-def _stacked_state(capacity: int, n_shards: int, n_domains: int) -> dict:
+def _stacked_state(capacity: int, n_shards: int, n_domains: int,
+                   prog=None) -> dict:
     """Per-shard local tables: every shard's local index 0 is that device
     group's root, capped at the full pool capacity."""
-    one = C.new_state(capacity, n_domains)
+    one = C.new_state(capacity, n_domains, prog)
     return {k: jnp.broadcast_to(v[None], (n_shards,) + v.shape)
             for k, v in one.items()}
 
@@ -75,6 +78,10 @@ class ShardedDeviceView:
     @property
     def state(self) -> dict:
         return self._backend.state
+
+    @property
+    def prog(self) -> PolicyProgram:
+        return self._backend.prog
 
     # ------------------------------------------------------------- helpers
 
@@ -114,7 +121,7 @@ class ShardedDeviceView:
                                  (self.n_shards,))
 
         def local(st, d, a, s):
-            return C.charge_batch(st, d, a, s[()], self.cfg)
+            return C.charge_batch(st, d, a, s[()], self.prog)
 
         new_state, g2, s2 = self._run(local, state, dom2, amt2, step2,
                                       n_out=3)
@@ -147,7 +154,7 @@ class ShardedDeviceView:
                                  (self.n_shards,))
 
         def local(st, d, s):
-            return (C.slot_gate(st, d, s[()]),)
+            return (C.slot_gate(st, d, s[()], self.prog),)
 
         (g2,) = self._run(local, state, dom2, step2, n_out=1)
         return g2[shard, jnp.arange(m)] & valid
@@ -162,9 +169,12 @@ class ShardedTableBackend:
 
     def __init__(self, capacity: int, n_domains: int = 64, cfg=None,
                  log: Optional[EventLog] = None, *,
-                 n_shards: Optional[int] = None, mesh=None):
+                 n_shards: Optional[int] = None, mesh=None,
+                 prog: Optional[PolicyProgram] = None):
         self.cfg = cfg or C.ControllerConfig()
         self.capacity = capacity
+        self.prog = prog if prog is not None else as_program(self.cfg)
+        self.attach_scope = "/"
         if mesh is None:
             devs = jax.devices()
             n_shards = n_shards or len(devs)
@@ -173,18 +183,52 @@ class ShardedTableBackend:
         self.mesh = mesh
         self.n_shards = mesh.devices.size
         self.per_shard_domains = n_domains
-        st = _stacked_state(capacity, self.n_shards, n_domains)
+        st = _stacked_state(capacity, self.n_shards, n_domains, self.prog)
         sh = NamedSharding(mesh, P("shard"))
         self.state = {k: jax.device_put(v, sh) for k, v in st.items()}
         # path -> (shard, local idx); "/" is every shard's local root but
         # addressed through shard 0
         self.index: dict[str, tuple[int, int]] = {"/": (0, 0)}
-        self._free = [list(range(1, n_domains))
+        self._free = [list(range(1, n_domains))    # heaps: lowest index first
                       for _ in range(self.n_shards)]
         self._tenant_shard: dict[str, int] = {}
         self._next_shard = 0
         self.log = log if log is not None else EventLog()
         self._now = 0.0
+        self._host_charge = None       # jitted host-path charge, per program
+
+    # ------------------------------------------------------------- programs
+
+    def _in_scope(self, path: str) -> bool:
+        return path_in_scope(self.attach_scope, path)
+
+    def attach(self, scope: str, prog: PolicyProgram) -> None:
+        self.prog = prog
+        self.attach_scope = scope
+        self._host_charge = None
+        rows = np.broadcast_to(
+            prog.neutral_row(),
+            (self.n_shards, self.per_shard_domains, prog.n_params)).copy()
+        if scope == "/":                # every shard's local root is in scope
+            rows[:, 0] = prog.default_row()
+        for path, (s, i) in self.index.items():
+            if path != "/" and self._in_scope(path):
+                rows[s, i] = prog.default_row()
+        sh = NamedSharding(self.mesh, P("shard"))
+        self.state = dict(self.state,
+                          prog=jax.device_put(jnp.asarray(rows), sh))
+
+    def update_params(self, path: str, kv: dict) -> None:
+        cols = {self.prog.col(k): float(v) for k, v in kv.items()}
+        prog = self.state["prog"]
+        for p in self._subtree(path):
+            s, i = self.index[p]
+            for c, v in cols.items():
+                if p == "/":            # root params on every shard's root
+                    prog = prog.at[:, 0, c].set(v)
+                else:
+                    prog = prog.at[s, i, c].set(v)
+        self.state = dict(self.state, prog=prog)
 
     # ------------------------------------------------------------ placement
 
@@ -235,7 +279,7 @@ class ShardedTableBackend:
             assert pshard == shard, (path, "crosses its tenant's shard")
         else:
             pidx = 0                       # this shard's local root
-        idx = self._free[shard].pop(0)
+        idx = heapq.heappop(self._free[shard])
         self.index[path] = (shard, idx)
         st = self.state
         upd = {
@@ -243,8 +287,15 @@ class ShardedTableBackend:
             "parent": pidx, "priority": spec.priority, "usage": 0,
             "peak": 0, "frozen": False, "active": True, "throttle_until": 0,
         }
+        if not self._in_scope(path):
+            row = self.prog.neutral_row()
+        elif self._in_scope(parent_path(path)):
+            row = np.asarray(st["prog"][shard, pidx])   # propagate down
+        else:
+            row = self.prog.default_row()   # path is the attach-scope root
         self.state = dict(st, **{
-            k: st[k].at[shard, idx].set(v) for k, v in upd.items()})
+            k: st[k].at[shard, idx].set(v) for k, v in upd.items()},
+            prog=st["prog"].at[shard, idx].set(jnp.asarray(row)))
         self.log.emit(self._now, Ev.CREATE, path, high=spec.high,
                       max=spec.max, shard=shard)
         return self._handle(shard, idx)
@@ -265,7 +316,7 @@ class ShardedTableBackend:
             frozen=st["frozen"].at[shard, idx].set(False),
             parent=st["parent"].at[shard, idx].set(-1))
         del self.index[path]
-        self._free[shard].append(idx)
+        heapq.heappush(self._free[shard], idx)
         if transfer_residual and residual and parent is not None:
             self.charge_unchecked(parent, residual)
         self.log.emit(self._now, Ev.REMOVE, path)
@@ -293,25 +344,53 @@ class ShardedTableBackend:
     def _root_total(self) -> int:
         return int(jnp.sum(self.state["usage"][:, 0]))
 
+    def _host_charge_fn(self):
+        """One jitted program for the whole host-driven charge: global
+        root-capacity check, owning-shard charge, scatter-back — so a
+        ``try_charge`` costs a single dispatch plus ONE device->host
+        gather (the packed flags vector) instead of per-key slice syncs
+        (the ROADMAP open item)."""
+        if self._host_charge is None:
+            prog = self.prog
+
+            def fn(state, shard, idx, pages, step):
+                cap = state["max"][0, 0]
+                root_total = jnp.sum(state["usage"][:, 0])
+                root_ok = (cap >= UNLIMITED) | (root_total + pages <= cap)
+                sub = jax.tree.map(lambda v: v[shard], state)
+                dom = jnp.where(root_ok, idx, -1).reshape(1)
+                sub, granted, stalled = C.charge_batch(
+                    sub, dom, pages.reshape(1).astype(jnp.int32), step, prog)
+                out = {k: state[k].at[shard].set(sub[k]) for k in state}
+                window = jnp.maximum(0, sub["throttle_until"][idx] - step)
+                flags = jnp.stack([granted[0].astype(jnp.int32),
+                                   stalled[0].astype(jnp.int32),
+                                   root_ok.astype(jnp.int32),
+                                   window.astype(jnp.int32)])
+                return out, flags
+
+            self._host_charge = jax.jit(fn)
+        return self._host_charge
+
     def try_charge(self, path: str, pages: int,
                    step: Optional[int]) -> ChargeTicket:
         if step is None:
             step = int(self._now)
         shard, idx = self.index[path]
         # global root capacity: shard-local tables each cap at the full
-        # pool, so the cross-shard sum is enforced here, host-side —
-        # exactly the HostTreeBackend root-max contract.  Read the live
-        # root max so write("/", "memory.max", v) takes effect.
-        cap = int(self.state["max"][0, 0])
-        if cap < UNLIMITED and self._root_total() + pages > cap:
+        # pool, so the cross-shard sum is enforced in the same jitted
+        # program, from the live root max — the HostTreeBackend
+        # root-max contract with write("/", "memory.max", v) honored.
+        state, flags = self._host_charge_fn()(
+            self.state, jnp.int32(shard), jnp.int32(idx), jnp.int32(pages),
+            jnp.int32(step))
+        granted, stalled, root_ok, window = (int(x) for x in
+                                             np.asarray(flags))
+        self.state = state
+        if not root_ok:
             return ChargeTicket(granted=False, stalled=True, blocked_by="/")
-        sub = self._slice(shard)
-        sub, granted, stalled = C.charge_batch(
-            sub, jnp.array([idx], jnp.int32), jnp.array([pages], jnp.int32),
-            step, self.cfg)
-        self._adopt(shard, sub, keys=("usage", "peak", "throttle_until"))
-        return ChargeTicket(granted=bool(granted[0]),
-                            stalled=bool(stalled[0]))
+        return ChargeTicket(granted=bool(granted), stalled=bool(stalled),
+                            delay_ms=window * self.prog.step_ms)
 
     def uncharge(self, path: str, pages: int) -> None:
         shard, idx = self.index[path]
@@ -328,10 +407,7 @@ class ShardedTableBackend:
     # ------------------------------------------------------ subtree control
 
     def _subtree(self, path: str) -> list[str]:
-        if path == "/":
-            return list(self.index)
-        return [p for p in self.index
-                if p == path or p.startswith(path.rstrip("/") + "/")]
+        return [p for p in self.index if path_in_scope(path, p)]
 
     def _set_frozen(self, path: str, flag: bool) -> None:
         st = self.state
@@ -434,6 +510,7 @@ class ShardedTableBackend:
                 "parent": parent,
                 "active": st["active"].reshape(-1),
                 "throttle_until": st["throttle_until"].reshape(-1),
+                "params": st["prog"].reshape(S * n, -1),
                 "root_usage": int(st["usage"][:, 0].sum()),
                 "root_handles": [s * n for s in range(S)]}
 

@@ -38,6 +38,7 @@ from repro.core.cgroup import (AgentCgroup, DeviceTableBackend, DeviceView,
 from repro.core.controller import ControllerConfig
 from repro.core.events import Ev, EventLog
 from repro.core.intent import Hint
+from repro.core.progs import PolicyProgram
 from repro.models import model as M
 from repro.perf import PerfConfig, DEFAULT_PERF
 from repro.serving.kvcache import PageAccountant, SlotCaches
@@ -153,6 +154,22 @@ class Engine:
         self._tool_seq = 0
         self._prev_throttle = np.zeros(self.cg.backend.n_domains, np.int64)
 
+    # ---------------------------------------------------- policy programs
+
+    def attach_program(self, prog: PolicyProgram) -> None:
+        """Swap the in-step enforcement program (BPF object load): the
+        next step re-traces against the new decision code.  For pure
+        parameter retunes use ``update_params`` — no retrace."""
+        self.cg.attach("/", prog)
+        self._view = self.cg.device_view()
+        self._step = _make_step_fn(self.cfg, self.perf, self.ecfg,
+                                   self._view)
+
+    def update_params(self, path: str = "/", **kv) -> None:
+        """Retune the live program mid-run (BPF map write): plain state,
+        takes effect the following step, never recompiles."""
+        self.cg.update_params(path, **kv)
+
     # ------------------------------------------------------------ admission
 
     def submit(self, session: Session) -> None:
@@ -225,6 +242,7 @@ class Engine:
             snap = self.cg.snapshot()
             usage, high, maxl = snap["usage"], snap["high"], snap["max"]
             parent = snap["parent"]
+            prog = self.cg.program
             decisions = {}
             for slot, sid in enumerate(self.slot_session):
                 if sid is None:
@@ -237,11 +255,12 @@ class Engine:
                            for i in chain)
                 hard = any(usage[i] >= maxl[i] for i in chain)
                 if over > 0 or hard:
-                    dly = int(np.ceil(min(
-                        e.ctrl.max_delay_ms,
-                        e.ctrl.base_delay_ms
-                        * (1 + e.ctrl.overage_gain * max(over, 0.0)))
-                        / e.ctrl.step_ms)) or 1
+                    # the SAME delay curve the in-step program applies,
+                    # computed from the session's live param row — just
+                    # polled late, the §4.2 responsiveness gap
+                    dly_ms = float(prog.delay_ms(
+                        snap["params"][s.dom_idx], max(float(over), 0.0)))
+                    dly = int(np.ceil(dly_ms / prog.step_ms)) or 1
                     decisions[slot] = self.step_no + e.userspace_react_steps + dly
             self._pending_gate = (self.step_no + e.userspace_react_steps,
                                   decisions)

@@ -10,6 +10,13 @@ freeze / feedback / kill).
 Measured outputs match Fig 8: per-task survival & completion, per-
 priority allocation-latency P50/P95, throttle trigger counts, and
 completion-time overhead vs an uncontended solo run.
+
+Enforcement decisions run in the ``PolicyProgram`` attached to
+``sim.cg`` — the literal same decision code the serving engine traces
+on device — so replay results and in-step enforcement cannot drift.
+Attach a custom program via ``Replay(..., program=...)`` (or let the
+policy's ``setup`` do it); graduated delays arrive on the
+``ChargeTicket`` and feed the backpressure physics below.
 """
 from __future__ import annotations
 
@@ -125,11 +132,13 @@ class ReplayResult:
 
 class Replay:
     def __init__(self, traces: list, priorities: list, policy: BasePolicy,
-                 cfg: ReplayConfig):
+                 cfg: ReplayConfig, *, program=None):
         assert len(traces) == len(priorities)
         self.cfg = cfg
         self.policy = policy
         self.cg = AgentCgroup(HostTreeBackend(cfg.capacity_mb))
+        if program is not None:
+            self.cg.attach("/", program)
         self.log = self.cg.log
         self.accounting = Accounting()
         self.now_ms = 0.0

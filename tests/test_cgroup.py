@@ -27,8 +27,14 @@ BACKENDS = ["host", "device", "sharded"]
 
 
 def mk_cg(kind: str, cap: int = 500) -> AgentCgroup:
+    # all three backends run the zero-delay program here so grant/deny
+    # parity is independent of op timing; throttling parity (windows,
+    # delays) is covered program-by-program in tests/test_progs.py
     if kind == "host":
-        return AgentCgroup(HostTreeBackend(cap))
+        from repro.core.progs import GraduatedThrottleProgram
+        return AgentCgroup(HostTreeBackend(
+            cap, prog=GraduatedThrottleProgram(base_delay_ms=0.0,
+                                               max_delay_ms=0.0)))
     if kind == "sharded":
         return AgentCgroup(ShardedTableBackend(cap, n_domains=16,
                                                cfg=NO_THROTTLE))
@@ -327,6 +333,25 @@ assert cg.usage("/") == sum(10 * (t + 1) for t in range(8))
 
 # 3) global root capacity enforced across shards host-side
 assert not cg.try_charge("/t0", 800).granted
+
+# 4) attached PolicyProgram parity on a real 8-shard mesh: the token
+# bucket rate-limits identically on host and sharded backends, even for
+# a tenant placed on shard > 0
+from repro.core.progs import TokenBucketProgram
+def mk_tb(kind):
+    cg = mk_cg(kind, cap=10_000)
+    cg.attach("/", TokenBucketProgram(bucket_capacity=16,
+                                      refill=(1.0, 2.0, 4.0)))
+    for t in range(3):
+        cg.mkdir(f"/t{t}")
+    return cg
+h, s = mk_tb("host"), mk_tb("sharded")
+assert s.backend.index["/t2"][0] == 2          # placed off shard 0
+for i, (path, amt) in enumerate([("/t2", 16), ("/t2", 8), ("/t2", 4),
+                                 ("/t2", 2), ("/t0", 16), ("/t2", 30)]):
+    hw, sw = h.try_charge(path, amt, step=i), s.try_charge(path, amt, step=i)
+    assert (hw.granted, hw.stalled) == (sw.granted, sw.stalled), (i, path)
+assert h.usage("/") == s.usage("/")
 print("SHARDED8 OK")
 """
 

@@ -1,0 +1,265 @@
+"""Pluggable policy programs (core/progs.py) — the memcg_bpf_ops API.
+
+Three claims, each load-bearing for the redesign:
+
+  * PARITY — one op sequence with the same program attached runs
+    bit-identically (grants, stalls, usage, peak, throttle windows) on
+    all three backends: host tree, device table, sharded table.  Holds
+    for the stock graduated program, the token bucket, and a custom
+    program defined right here (the surface is user-extensible).
+  * LIVE RETUNE — ``cg.update_params`` on a live jitted consumer is a
+    pure state write: zero retraces (asserted via jit cache size and a
+    trace counter), new curve effective on the following charge.
+  * NEW SCENARIOS — ``TokenBucketProgram`` rate-limits (pages/step,
+    per-priority refill), which the overage-delay curve cannot express.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import domains as D
+from repro.core.cgroup import (AgentCgroup, DeviceTableBackend, DomainSpec,
+                               HostTreeBackend)
+from repro.core.progs import (GraduatedThrottleProgram, PolicyProgram,
+                              TokenBucketProgram, Verdict)
+from repro.core.sharded import ShardedTableBackend
+
+BACKENDS = ["host", "device", "sharded"]
+
+
+def mk_cg(kind: str, prog: PolicyProgram, cap: int = 500) -> AgentCgroup:
+    if kind == "host":
+        cg = AgentCgroup(HostTreeBackend(cap))
+    elif kind == "sharded":
+        cg = AgentCgroup(ShardedTableBackend(cap, n_domains=16))
+    else:
+        cg = AgentCgroup(DeviceTableBackend(cap, n_domains=16))
+    cg.attach("/", prog)
+    cg.mkdir("/t")
+    cg.mkdir("/t/a", DomainSpec(high=40))
+    cg.mkdir("/t/b", DomainSpec(max=200, priority=D.LOW))
+    return cg
+
+
+class BurstCapProgram(GraduatedThrottleProgram):
+    """Test-local custom program: denies any single request larger than
+    a per-domain ``burst_cap`` (0 disables) on top of the graduated
+    throttle — proves the attach surface is open to user code."""
+
+    param_names = GraduatedThrottleProgram.param_names + ("burst_cap",)
+
+    def __init__(self, burst_cap: float = 0.0, **kw):
+        super().__init__(**kw)
+        self.burst_cap = float(burst_cap)
+
+    def default_row(self):
+        return np.concatenate([super().default_row(),
+                               np.float32([self.burst_cap])])
+
+    def on_charge(self, view, req):
+        base = super().on_charge(view, req)
+        cap = view.params[4]
+        too_big = (cap > 0) & (req.amt > cap)
+        return Verdict(base.grant & ~too_big, base.stall | too_big,
+                       base.delay_ms, base.params)
+
+
+# ops on the integer step clock: over-``high`` charges impose throttle
+# windows, charges inside a window stall, windows expire with the clock
+OPS = [
+    (0, "/t/a", 60),       # over high=40 -> graduated window
+    (1, "/t/a", 5),        # inside the window
+    (2, "/t/b", 150),
+    (3, "/t/b", 100),      # /t/b max=200 wall
+    (4, "/t/b", 30),
+    (8, "/t/a", 5),        # after the window
+    (12, "/t/a", 5),
+    (20, "/t/b", 10),
+]
+
+PROGRAMS = {
+    "graduated": lambda: GraduatedThrottleProgram(),
+    "token_bucket": lambda: TokenBucketProgram(bucket_capacity=64,
+                                               refill=(2.0, 8.0, 32.0)),
+    "burst_cap": lambda: BurstCapProgram(burst_cap=100),
+}
+
+
+def run_ops(cg: AgentCgroup):
+    out = []
+    for step, path, amt in OPS:
+        t = cg.try_charge(path, amt, step=step)
+        out.append((t.granted, t.stalled, round(t.delay_ms, 3)))
+    return out
+
+
+def windows(cg: AgentCgroup) -> dict:
+    be = cg.backend
+    out = {}
+    for p in ["/t/a", "/t/b"]:
+        if isinstance(be, HostTreeBackend):
+            out[p] = int(be.tree.get(p).throttle_until)
+        elif isinstance(be, ShardedTableBackend):
+            s, i = be.index[p]
+            out[p] = int(be.state["throttle_until"][s, i])
+        else:
+            out[p] = int(be.table.state["throttle_until"][be.table.index[p]])
+    return out
+
+
+@pytest.mark.parametrize("prog_name", list(PROGRAMS))
+def test_program_parity_across_backends(prog_name):
+    """THE acceptance loop of the redesign: identical grants, stalls,
+    delays, usage, peak, and throttle windows on every backend, for
+    stock and custom programs alike."""
+    cgs = {k: mk_cg(k, PROGRAMS[prog_name]()) for k in BACKENDS}
+    results = {k: run_ops(cg) for k, cg in cgs.items()}
+    assert results["host"] == results["device"] == results["sharded"], \
+        prog_name
+    for path in ["/", "/t", "/t/a", "/t/b"]:
+        assert len({cg.usage(path) for cg in cgs.values()}) == 1, path
+        assert len({cg.peak(path) for cg in cgs.values()}) == 1, path
+    wins = {k: windows(cg) for k, cg in cgs.items()}
+    assert wins["host"] == wins["device"] == wins["sharded"], prog_name
+
+
+def test_graduated_program_throttles_and_expires():
+    cg = mk_cg("device", GraduatedThrottleProgram())
+    t = cg.try_charge("/t/a", 60, step=0)
+    # over_frac 0.5 -> 10*(1+10*0.5) = 60 ms -> 6 steps
+    assert t.granted and t.delay_ms == 60.0
+    assert not cg.try_charge("/t/a", 1, step=5).granted
+    assert cg.try_charge("/t/a", 1, step=6).granted
+
+
+# ------------------------------------------------------------ token bucket
+
+
+def test_token_bucket_rate_limits_what_delay_cannot():
+    """A domain far under ``high`` (no overage ever) is still paced to
+    its refill rate — pages per step, not standing usage."""
+    prog = TokenBucketProgram(bucket_capacity=10, refill=(1.0, 2.0, 4.0))
+    cg = AgentCgroup(DeviceTableBackend(10_000, n_domains=8))
+    cg.attach("/", prog)
+    cg.mkdir("/s")                           # NORMAL: 2 pages/step
+    assert cg.try_charge("/s", 10, step=0).granted     # full bucket
+    assert not cg.try_charge("/s", 5, step=1).granted  # level 2 < 5
+    assert cg.try_charge("/s", 5, step=3).granted      # level 6 >= 5
+    # sustained: ~2 pages/step from here on
+    grants = sum(cg.try_charge("/s", 2, step=s).granted
+                 for s in range(4, 24))
+    assert grants <= 20 and cg.usage("/s") <= 10 + 5 + 2 * 21
+
+
+def test_token_bucket_priority_refill():
+    prog = TokenBucketProgram(bucket_capacity=8, refill=(1.0, 2.0, 8.0))
+    cg = AgentCgroup(DeviceTableBackend(10_000, n_domains=8))
+    cg.attach("/", prog)
+    cg.mkdir("/lo", DomainSpec(priority=D.LOW))
+    cg.mkdir("/hi", DomainSpec(priority=D.HIGH))
+    for p in ("/lo", "/hi"):
+        assert cg.try_charge(p, 8, step=0).granted     # drain both
+    # one step later: HIGH refilled 8, LOW only 1
+    assert cg.try_charge("/hi", 8, step=1).granted
+    assert not cg.try_charge("/lo", 8, step=1).granted
+
+
+def test_token_bucket_neutral_outside_attach_scope():
+    prog = TokenBucketProgram(bucket_capacity=4, refill=(1.0, 1.0, 1.0))
+    cg = AgentCgroup(DeviceTableBackend(10_000, n_domains=8))
+    cg.mkdir("/scoped")
+    cg.mkdir("/free")
+    cg.attach("/scoped", prog)
+    assert not cg.try_charge("/scoped", 50, step=0).granted   # bucketed
+    assert cg.try_charge("/free", 50, step=0).granted         # neutral row
+
+
+# ------------------------------------------------------- live retuning
+
+
+def test_update_params_no_retrace_new_curve_next_charge():
+    """The adaptability pillar: retuning a live program is a param-table
+    write — the jitted charge function is NOT retraced, and the new
+    delay curve applies to the very next charge."""
+    cg = AgentCgroup(DeviceTableBackend(10_000, n_domains=8))
+    cg.mkdir("/s", DomainSpec(high=10))
+    view = cg.device_view()
+    traces = 0
+
+    def charge(state, dom, amt, step):
+        nonlocal traces
+        traces += 1
+        return view.charge(state, dom, amt, step)
+
+    jcharge = jax.jit(charge)
+    idx = cg.handle("/s")
+    dom = jnp.array([idx])
+    st, g, _ = jcharge(view.state, dom, jnp.array([20], jnp.int32), 0)
+    view.commit(st)
+    w0 = int(st["throttle_until"][idx])            # usage 20, over 1.0
+    assert bool(g[0]) and w0 == 0 + 11             # 10*(1+10*1.0) -> 11 steps
+
+    cg.update_params("/s", overage_gain=100.0, max_delay_ms=100_000.0)
+    st, g, _ = jcharge(view.state, dom, jnp.array([10], jnp.int32), 50)
+    view.commit(st)
+    assert bool(g[0])
+    # new curve: usage 30, over 2.0: 10*(1+100*2.0) = 2010 ms -> 201 steps
+    assert int(st["throttle_until"][idx]) == 50 + 201
+    assert traces == 1                             # no retrace
+    assert jcharge._cache_size() == 1
+
+
+def test_update_params_unknown_knob_raises():
+    cg = AgentCgroup(HostTreeBackend(100))
+    cg.mkdir("/s")
+    with pytest.raises(KeyError):
+        cg.update_params("/s", not_a_knob=1.0)
+
+
+def test_update_params_subtree_and_inheritance():
+    """Params write to the whole subtree, and new children inherit the
+    parent's live row (cgroup settings propagate down)."""
+    for kind in BACKENDS:
+        cg = mk_cg(kind, GraduatedThrottleProgram())
+        cg.update_params("/t", base_delay_ms=40.0)
+        cg.mkdir("/t/a/kid", DomainSpec(high=10))
+        t = cg.try_charge("/t/a/kid", 20, step=0)  # over 1.0 -> 40*(1+10)
+        assert t.granted and t.delay_ms == 440.0, kind
+
+
+def test_attach_program_on_live_engine():
+    """Engine-level acceptance: swap the program on a live engine (one
+    deliberate retrace), then retune it with zero retraces while the
+    jitted step keeps running."""
+    from repro.configs import get_config, reduced
+    from repro.models import model as M
+    from repro.models.schema import init_params
+    from repro.perf import DEFAULT_PERF, replace as perf_replace
+    from repro.serving.engine import Engine, EngineConfig
+    from repro.serving.session import Phase, Session
+
+    cfg = dataclasses.replace(reduced(get_config("llama3.2-3b")),
+                              dtype="float32")
+    params = init_params(M.param_schema(cfg), jax.random.PRNGKey(0),
+                         cfg.dtype)
+    eng = Engine(cfg, params, perf=perf_replace(DEFAULT_PERF, scan_chunk=32),
+                 ecfg=EngineConfig(max_slots=2, s_max=128, pool_pages=64,
+                                   page_tokens=16, mode="inkernel",
+                                   use_freeze=False), seed=0)
+    eng.attach_program(TokenBucketProgram(bucket_capacity=64,
+                                          refill=(1.0, 2.0, 4.0)))
+    eng.submit(Session(sid="s", tenant="t", priority=D.NORMAL,
+                       prompt=list(range(2, 10)),
+                       phases=[Phase(6, 8, "test"), Phase(6, 0)]))
+    for _ in range(8):
+        eng.step()
+    cache0 = eng._step._cache_size()
+    eng.update_params("/", refill_normal=9.0, bucket_capacity=128.0)
+    for _ in range(8):
+        eng.step()
+    assert eng._step._cache_size() == cache0       # retune never re-jits
+    row = eng.cg.snapshot()["params"][eng.cg.handle("/t")]
+    assert row[eng.cg.program.col("refill_normal")] == 9.0

@@ -22,6 +22,7 @@ from hypothesis import given, settings
 from repro.core import domains as D
 from repro.core.cgroup import AgentCgroup, DomainSpec, HostTreeBackend
 from repro.core.controller import ControllerConfig
+from repro.core.progs import GraduatedThrottleProgram
 
 
 def mk_tree(cap=1000):
@@ -106,12 +107,14 @@ def test_charge_uncharge_roundtrip(a, b):
 
 
 def _mk_cg(kind: str) -> AgentCgroup:
+    # zero-delay program on BOTH backends: grant/deny semantics compared
+    # in isolation (throttle parity gets its own fuzz test below)
     if kind == "host":
-        cg = AgentCgroup(HostTreeBackend(500))
+        cg = AgentCgroup(HostTreeBackend(
+            500, prog=GraduatedThrottleProgram(base_delay_ms=0.0,
+                                               max_delay_ms=0.0)))
     else:
         from repro.core.cgroup import DeviceTableBackend
-        # zero-delay config: grant/deny semantics compared in isolation
-        # (throttle timing is step-quantized on device)
         cg = AgentCgroup(DeviceTableBackend(
             500, n_domains=16,
             cfg=ControllerConfig(base_delay_ms=0.0, max_delay_ms=0.0)))
@@ -135,6 +138,63 @@ def test_device_matches_host_via_cgroup_api(seq):
         want = host.try_charge(path, amt, step=i)
         got = dev.try_charge(path, amt, step=i)
         assert got.granted == want.granted, (i, path, amt)
+    for path in PATHS + ["/"]:
+        assert dev.usage(path) == host.usage(path), path
+        assert dev.peak(path) == host.peak(path), path
+
+
+# -------------------------------------- runtime update_params fuzz (progs)
+
+
+KNOBS = ["base_delay_ms", "max_delay_ms", "overage_gain",
+         "high_priority_discount"]
+
+prog_ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("charge"), st.sampled_from(PATHS),
+                  st.integers(min_value=1, max_value=150)),
+        st.tuples(st.just("retune"), st.sampled_from(PATHS + ["/"]),
+                  st.tuples(st.sampled_from(KNOBS),
+                            st.integers(min_value=0, max_value=400))),
+    ),
+    min_size=1, max_size=40)
+
+
+def _mk_throttling_cg(kind: str) -> AgentCgroup:
+    """Same tree as ``_mk_cg`` but with the stock graduated program LIVE
+    (non-zero delays), so throttle windows — and their runtime retunes —
+    participate in the parity check."""
+    if kind == "host":
+        cg = AgentCgroup(HostTreeBackend(500))
+    else:
+        from repro.core.cgroup import DeviceTableBackend
+        cg = AgentCgroup(DeviceTableBackend(500, n_domains=16))
+    cg.mkdir("/t")
+    cg.mkdir("/t/a", DomainSpec(high=120))
+    cg.mkdir("/t/b", DomainSpec(max=200, priority=D.LOW))
+    cg.mkdir("/t/a/tool", DomainSpec(high=40))
+    return cg
+
+
+@given(prog_ops)
+@settings(max_examples=40, deadline=None)
+def test_update_params_parity_under_fuzz(op_list):
+    """Interleave charges with random live ``update_params`` writes:
+    host and device must keep bit-identical grant/stall/delay behaviour
+    — the same decision code reading the same (retuned) param tables."""
+    host, dev = _mk_throttling_cg("host"), _mk_throttling_cg("device")
+    for i, op in enumerate(op_list):
+        if op[0] == "charge":
+            _, path, amt = op
+            want = host.try_charge(path, amt, step=i)
+            got = dev.try_charge(path, amt, step=i)
+            assert got.granted == want.granted, (i, path, amt)
+            assert got.stalled == want.stalled, (i, path, amt)
+            assert got.delay_ms == want.delay_ms, (i, path, amt)
+        else:
+            _, path, (knob, val) = op
+            host.update_params(path, **{knob: float(val)})
+            dev.update_params(path, **{knob: float(val)})
     for path in PATHS + ["/"]:
         assert dev.usage(path) == host.usage(path), path
         assert dev.peak(path) == host.peak(path), path
