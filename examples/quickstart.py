@@ -15,6 +15,7 @@ from repro.configs import SHAPES, get_config, reduced
 from repro.core import domains as D
 from repro.core.cgroup import (AgentCgroup, DeviceTableBackend, DomainSpec,
                                HostTreeBackend)
+from repro.core.daemon import AsyncDaemonBackend
 from repro.core.controller import ControllerConfig
 from repro.core.intent import Hint
 from repro.data.pipeline import DataIterator
@@ -47,11 +48,27 @@ def drive(cg: AgentCgroup) -> dict:
 
 # zero-delay config so host and device grant/deny semantics align
 no_throttle = ControllerConfig(base_delay_ms=0.0, max_delay_ms=0.0)
-host = drive(AgentCgroup(HostTreeBackend(1000)))
+host_cg = AgentCgroup(HostTreeBackend(1000))
+# the async lifecycle daemon: same ops, but queued to a daemon thread
+# and applied in FIFO epochs — bit-exact with its inner backend
+async_cg = AgentCgroup(AsyncDaemonBackend(HostTreeBackend(1000)))
+host = drive(host_cg)
 dev = drive(AgentCgroup(DeviceTableBackend(1000, cfg=no_throttle)))
+asy = drive(async_cg)
 print(f"host   backend: {host}")
 print(f"device backend: {dev}")
-assert host == dev, "backends diverged!"
+print(f"async  backend: {asy} (epoch {async_cg.backend.epoch})")
+assert host == dev == asy, "backends diverged!"
+# identical op sequence -> identical memcg event counters, async or not:
+# shrink the session high and breach it on both host-class backends
+for c in (host_cg, async_cg):
+    c.write("/tenant/sess", "memory.high", 10)
+    c.try_charge("/tenant/sess", 20)     # high breach + graduated throttle
+ev_host = host_cg.read("/tenant/sess", "memory.events")
+ev_async = async_cg.read("/tenant/sess", "memory.events")
+print(f"memory.events: host {ev_host} == async {ev_async}")
+assert ev_host == ev_async, "event counters diverged!"
+async_cg.backend.close()
 
 print("\n== 1b. backend-specific extras ==")
 cg = AgentCgroup(HostTreeBackend(1000))

@@ -3,6 +3,8 @@ JAX serving pod (see DESIGN.md §2 for the kernel->TPU mapping).
 
   cgroup      — the unified cgroupfs-style control plane (AgentCgroup
                 facade + pluggable host/device backends + intent channel)
+  daemon      — async lifecycle daemon backend: lifecycle ops off the
+                enforcement hot path, applied in batched FIFO epochs
   progs       — attachable in-step policy programs (memcg_bpf_ops
                 analogue): PolicyProgram hooks over a live param table
   domains     — hierarchical resource domains (cgroup v2 analogue)
@@ -18,6 +20,7 @@ from repro.core.domains import (DomainTree, Domain, ChargeResult,
 from repro.core.cgroup import (AgentCgroup, Backend, ChargeTicket,
                                DeviceTableBackend, DeviceView, DomainSpec,
                                HostTreeBackend, IntentChannel, Lease)
+from repro.core.daemon import AsyncDaemonBackend, DaemonError
 from repro.core.progs import (ChainView, GraduatedThrottleProgram,
                               PolicyProgram, Request, TokenBucketProgram,
                               Verdict, charge_decision)
@@ -29,7 +32,8 @@ from repro.core.freezer import FrozenStore
 
 __all__ = [
     "DomainTree", "Domain", "ChargeResult", "UNLIMITED", "LOW", "NORMAL",
-    "HIGH", "AgentCgroup", "Backend", "ChargeTicket", "DeviceTableBackend",
+    "HIGH", "AgentCgroup", "AsyncDaemonBackend", "Backend", "ChargeTicket",
+    "DaemonError", "DeviceTableBackend",
     "DeviceView", "DomainSpec", "HostTreeBackend", "IntentChannel", "Lease",
     "Ev", "Event", "EventLog", "Accounting", "LatencyStats",
     "PSITracker", "Hint", "AdaptiveAgentModel", "Feedback", "hint_to_high",

@@ -26,6 +26,12 @@ Backends conform to the ``Backend`` protocol:
     lightweight daemon); per-allocation enforcement stays inside the
     jitted engine step via ``device_view()``, whose pure ``lax``-only
     methods the step function closes over.
+  * ``ShardedTableBackend`` (``core/sharded.py``) — the device table
+    across an N-device mesh, per-tenant device-group placement.
+  * ``AsyncDaemonBackend`` (``core/daemon.py``) — wraps any of the
+    above and moves every lifecycle op onto a daemon thread behind a
+    FIFO command queue, applied in batched epochs at step boundaries;
+    ``flush()``/``barrier()`` make it bit-exact with its inner backend.
 
 Because both backends speak the same op vocabulary, host/device
 cross-validation is one loop: replay an op sequence against two
@@ -838,6 +844,13 @@ class AgentCgroup:
         self.device_view().commit(state)
 
     # ------------------------------------------------------------------ misc
+
+    def flush(self) -> Optional[int]:
+        """Epoch boundary: apply any queued lifecycle ops (async
+        backends return the epoch now reflected); a no-op on
+        synchronous backends."""
+        fn = getattr(self.backend, "flush", None)
+        return fn() if fn is not None else None
 
     @property
     def log(self) -> EventLog:

@@ -19,6 +19,11 @@ Host-side daemon work (lifecycle only, as in the paper): admission,
 per-tool-call child domains with intent-hint highs, freeze/thaw with
 state offload (SlotCaches/FrozenStore), downward feedback that lets a
 session shrink a pending context append (strategy reconstruction).
+With ``EngineConfig(backend="async")`` that lifecycle work runs on the
+``AsyncDaemonBackend`` daemon thread in FIFO epochs applied at the
+``cg.flush()`` each step issues before reading control state —
+bit-exact with the synchronous backends, lifecycle off the step
+critical path.
 """
 from __future__ import annotations
 
@@ -53,7 +58,8 @@ class EngineConfig:
     pool_pages: int = 256                # KV pool per device group
     page_tokens: int = 16
     mode: str = "inkernel"               # inkernel | userspace | nolimit
-    backend: str = "device"              # device | sharded
+    backend: str = "device"              # device | sharded | async
+    async_inner: str = "device"          # async: the wrapped backend
     n_shards: Optional[int] = None       # sharded: device-group count
     ctrl: ControllerConfig = ControllerConfig(step_ms=10.0)
     temperature: float = 0.0
@@ -128,13 +134,23 @@ class Engine:
         self.caches = SlotCaches(cfg, ecfg.max_slots, ecfg.s_max)
         self.accountant = PageAccountant(ecfg.page_tokens)
         n_domains = 4 * ecfg.max_slots + 8
-        if ecfg.backend == "sharded":
+        inner_kind = (ecfg.async_inner if ecfg.backend == "async"
+                      else ecfg.backend)
+        if inner_kind == "sharded":
             from repro.core.sharded import ShardedTableBackend
             be = ShardedTableBackend(ecfg.pool_pages, n_domains=n_domains,
                                      cfg=ecfg.ctrl, n_shards=ecfg.n_shards)
         else:
             be = DeviceTableBackend(ecfg.pool_pages, n_domains=n_domains,
                                     cfg=ecfg.ctrl)
+        if ecfg.backend == "async":
+            # lifecycle off the hot path: mkdir/rmdir/write/freeze/thaw/
+            # lease ops run on the daemon thread in FIFO epochs, applied
+            # at the flush() in step() — the jitted enforcement path
+            # closes over the INNER backend's device view and never
+            # blocks on lifecycle work
+            from repro.core.daemon import AsyncDaemonBackend
+            be = AsyncDaemonBackend(be)
         self.cg = AgentCgroup(be)
         # pool_pages is per device group: each shard root is capped at
         # pool_pages in-step, so the aggregate the daemon reasons about
@@ -368,6 +384,10 @@ class Engine:
     def step(self) -> None:
         e = self.ecfg
         self.cg.set_time(self.step_no)
+        # epoch boundary: queued lifecycle ops (async backend) apply
+        # here, before the step reads the control state — never between
+        # the state read and the post-step commit
+        self.cg.flush()
         if self.ecfg.mode == "userspace":
             self._userspace_policy()
             self._apply_pending_gate()
@@ -452,6 +472,13 @@ class Engine:
         self._daemon()
         self.step_no += 1
         self.metrics.steps = self.step_no
+
+    def close(self) -> None:
+        """Release backend resources — stops the async lifecycle daemon
+        thread (a no-op for the synchronous backends)."""
+        fn = getattr(self.cg.backend, "close", None)
+        if fn is not None:
+            fn()
 
     def run(self, max_steps: Optional[int] = None) -> EngineMetrics:
         limit = max_steps or self.ecfg.max_steps

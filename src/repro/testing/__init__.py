@@ -1,0 +1,19 @@
+"""Reusable test kits for the AgentCgroup control plane.
+
+``repro.testing.conformance`` is the backend-certification kit: any
+``Backend`` implementation proves itself bit-identical to the reference
+host-tree semantics by replaying the standard scenario set through one
+parametrized fixture.
+"""
+from repro.testing.conformance import (BACKEND_KINDS, ConformanceReport,
+                                       ConformanceSuite, OpRecorder,
+                                       Scenario, ScenarioResult,
+                                       STANDARD_SCENARIOS, backend_features,
+                                       get_scenario, replay,
+                                       standard_backend_factory)
+
+__all__ = [
+    "BACKEND_KINDS", "ConformanceReport", "ConformanceSuite", "OpRecorder",
+    "Scenario", "ScenarioResult", "STANDARD_SCENARIOS", "backend_features",
+    "get_scenario", "replay", "standard_backend_factory",
+]

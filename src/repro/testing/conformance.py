@@ -1,0 +1,519 @@
+"""Backend-conformance kit: one declarative op vocabulary, any backend.
+
+PR 2–4 proved backend parity with ad-hoc op lists duplicated across
+``tests/test_cgroup.py`` and ``tests/test_progs.py``; with a fourth
+backend (the async lifecycle daemon) that plumbing becomes a reusable
+kit.  A ``Scenario`` is a declarative op sequence; ``replay()`` drives
+it through the ``AgentCgroup`` facade against any backend and records
+every *observable* (grants, stalls, delays, residuals, reads, plus a
+final usage/peak audit of the whole tree); ``ConformanceSuite.run()``
+replays each scenario against the backend under test AND a reference
+backend (the host tree — the reference semantics) and diffs the
+observation streams.  A new ``Backend`` implementation certifies
+itself with one parametrized fixture:
+
+    suite = ConformanceSuite()
+    report = suite.run(standard_backend_factory("async-device"))
+    assert report.ok, report.summary()
+
+Scenarios cover the memcg contract (charge/uncharge, hard-max walls,
+freeze -> thaw re-charge, residual transfer on rmdir, subtree kill),
+policy programs (graduated throttle windows, token-bucket pacing,
+attach scoping, live retunes), the intent channel (lease open /
+feedback / close), control files, and memcg event counters (feature
+``"events"`` — only backends with full host-side counters run it).
+
+Authoring new scenarios: write the op tuples directly, or drive a live
+``AgentCgroup`` through an ``OpRecorder`` and call ``to_scenario()``.
+
+Op vocabulary (``(name, *args)`` tuples; ``charge`` without an explicit
+step runs on the op-index step clock):
+
+    ("mkdir", path[, {spec kwargs}])        ("rmdir", path[, transfer])*
+    ("charge", path, amt[, step])*          ("uncharge", path, amt)
+    ("unchecked", path, amt)                ("kill", path)*
+    ("freeze", path)  ("thaw", path)        ("write", path, file, value)
+    ("read", path, file)*                   ("usage", path)* ("peak", path)*
+    ("exists", path)*                       ("attach", scope, prog_key)
+    ("update_params", path, {kv})           ("set_time", t)
+    ("lease_open", tool, hint|None, parent[, {kw}])
+    ("lease_feedback", tool, reason)*       ("lease_close", tool)*
+    ("flush",)
+
+Starred ops record an observation; every replay ends with a flush (a
+no-op on synchronous backends) and the final tree audit, so async
+backends are compared at an epoch boundary — their bit-exactness
+contract.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence
+
+from repro.core import domains as D
+from repro.core.cgroup import (AgentCgroup, DeviceTableBackend, DomainSpec,
+                               HostTreeBackend)
+from repro.core.intent import Hint
+from repro.core.progs import GraduatedThrottleProgram, TokenBucketProgram
+
+__all__ = ["Scenario", "ConformanceSuite", "ConformanceReport",
+           "ScenarioResult", "OpRecorder", "replay", "get_scenario",
+           "standard_backend_factory", "backend_features", "BACKEND_KINDS",
+           "STANDARD_SCENARIOS"]
+
+
+# --------------------------------------------------------------- scenarios
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """A named, declarative op sequence plus the programs it attaches."""
+    name: str
+    ops: tuple
+    programs: dict = field(default_factory=dict)     # key -> () -> program
+    capacity: int = 500
+    n_domains: int = 16
+    requires: frozenset = frozenset()                # backend feature flags
+    description: str = ""
+
+
+def replay(cg: AgentCgroup, scenario: Scenario) -> list:
+    """Drive ``scenario`` through the facade; return the observation
+    stream ``[(op_idx, op_name, value), ...]`` ending with the final
+    usage/peak audit of every surviving path (op_idx -1)."""
+    obs: list = []
+    leases: dict = {}
+    for i, op in enumerate(scenario.ops):
+        name, *a = op
+        if name == "mkdir":
+            cg.mkdir(a[0], DomainSpec(**(a[1] if len(a) > 1 else {})))
+        elif name == "charge":
+            step = a[2] if len(a) > 2 else i
+            t = cg.try_charge(a[0], a[1], step=step)
+            obs.append((i, "charge",
+                        (t.granted, t.stalled, round(t.delay_ms, 3))))
+        elif name == "uncharge":
+            cg.uncharge(a[0], a[1])
+        elif name == "unchecked":
+            cg.charge_unchecked(a[0], a[1])
+        elif name == "freeze":
+            cg.freeze(a[0])
+        elif name == "thaw":
+            cg.thaw(a[0])
+        elif name == "kill":
+            obs.append((i, "kill", cg.kill(a[0])))
+        elif name == "rmdir":
+            transfer = a[1] if len(a) > 1 else True
+            obs.append((i, "rmdir",
+                        cg.rmdir(a[0], transfer_residual=transfer)))
+        elif name == "write":
+            cg.write(a[0], a[1], a[2])
+        elif name == "read":
+            obs.append((i, "read", (a[0], a[1], cg.read(a[0], a[1]))))
+        elif name == "usage":
+            obs.append((i, "usage", (a[0], cg.usage(a[0]))))
+        elif name == "peak":
+            obs.append((i, "peak", (a[0], cg.peak(a[0]))))
+        elif name == "exists":
+            obs.append((i, "exists", (a[0], cg.exists(a[0]))))
+        elif name == "attach":
+            cg.attach(a[0], scenario.programs[a[1]]())
+        elif name == "update_params":
+            cg.update_params(a[0], **a[1])
+        elif name == "set_time":
+            cg.set_time(a[0])
+        elif name == "lease_open":
+            hint = Hint[a[1]] if a[1] else None
+            kw = a[3] if len(a) > 3 else {}
+            leases[a[0]] = cg.intent.declare(a[0], hint, parent=a[2], **kw)
+        elif name == "lease_feedback":
+            fb = leases[a[0]].feedback(a[1])
+            obs.append((i, "lease_feedback",
+                        (fb.reason, fb.peak_pages, fb.limit_pages)))
+        elif name == "lease_close":
+            obs.append((i, "lease_close", leases[a[0]].close()))
+        elif name == "flush":
+            cg.flush()
+        else:
+            raise ValueError(f"unknown conformance op {name!r}")
+    cg.flush()                     # epoch boundary: async == sync from here
+    for path in sorted(cg.paths()):
+        obs.append((-1, "final", (path, cg.usage(path), cg.peak(path))))
+    return obs
+
+
+class OpRecorder:
+    """Records facade calls into a declarative op list that ``replay``
+    reproduces — drive a live ``AgentCgroup`` once, keep the scenario."""
+
+    def __init__(self, cg: AgentCgroup):
+        self.cg = cg
+        self.ops: list = []
+
+    def mkdir(self, path: str, **kw) -> int:
+        self.ops.append(("mkdir", path, dict(kw)))
+        return self.cg.mkdir(path, DomainSpec(**kw))
+
+    def try_charge(self, path: str, pages: int, step: Optional[int] = None):
+        # the step (explicit None = facade clock) replays verbatim
+        self.ops.append(("charge", path, pages, step))
+        return self.cg.try_charge(path, pages, step=step)
+
+    def uncharge(self, path: str, pages: int) -> None:
+        self.ops.append(("uncharge", path, pages))
+        self.cg.uncharge(path, pages)
+
+    def charge_unchecked(self, path: str, pages: int) -> None:
+        self.ops.append(("unchecked", path, pages))
+        self.cg.charge_unchecked(path, pages)
+
+    def freeze(self, path: str) -> None:
+        self.ops.append(("freeze", path))
+        self.cg.freeze(path)
+
+    def thaw(self, path: str) -> None:
+        self.ops.append(("thaw", path))
+        self.cg.thaw(path)
+
+    def kill(self, path: str) -> int:
+        self.ops.append(("kill", path))
+        return self.cg.kill(path)
+
+    def rmdir(self, path: str, *, transfer_residual: bool = True) -> int:
+        self.ops.append(("rmdir", path, transfer_residual))
+        return self.cg.rmdir(path, transfer_residual=transfer_residual)
+
+    def write(self, path: str, file: str, value) -> None:
+        self.ops.append(("write", path, file, value))
+        self.cg.write(path, file, value)
+
+    def read(self, path: str, file: str):
+        self.ops.append(("read", path, file))
+        return self.cg.read(path, file)
+
+    def to_scenario(self, name: str, **kw) -> Scenario:
+        return Scenario(name=name, ops=tuple(self.ops), **kw)
+
+
+# ----------------------------------------------------- standard scenarios
+
+
+def _zero_delay() -> GraduatedThrottleProgram:
+    """Grant/deny semantics isolated from op timing."""
+    return GraduatedThrottleProgram(base_delay_ms=0.0, max_delay_ms=0.0)
+
+
+def _std_tree(*extra) -> tuple:
+    return (("mkdir", "/t"),
+            ("mkdir", "/t/a", {"high": 120}),
+            ("mkdir", "/t/b", {"max": 200, "priority": D.LOW}),
+            ("mkdir", "/t/a/tool", {"high": 40})) + extra
+
+
+_AUDIT = (("usage", "/"), ("usage", "/t"), ("usage", "/t/a"),
+          ("usage", "/t/b"), ("peak", "/"), ("peak", "/t"),
+          ("peak", "/t/a"), ("peak", "/t/b"))
+
+STANDARD_SCENARIOS: tuple = (
+    Scenario(
+        "lifecycle",
+        description="the canonical charge/deny/uncharge/freeze/thaw/"
+                    "rmdir-residual/unchecked sequence (PR-2 golden ops)",
+        programs={"zero": _zero_delay},
+        ops=(("attach", "/", "zero"),) + _std_tree(
+            ("charge", "/t/a/tool", 60),      # grant; over tool high
+            ("charge", "/t/b", 150),          # grant
+            ("charge", "/t/b", 100),          # deny: /t/b max=200
+            ("uncharge", "/t/b", 50),
+            ("charge", "/t/b", 100),          # grant now
+            ("freeze", "/t/a"),
+            ("charge", "/t/a/tool", 5),       # deny: frozen ancestor
+            ("thaw", "/t/a"),
+            ("charge", "/t/a/tool", 5),       # grant again
+            ("rmdir", "/t/a/tool"),           # residual 65 -> /t/a
+            ("unchecked", "/t/a", 20),        # lifecycle bookkeeping
+            ("uncharge", "/t/a", 30),
+            ("charge", "/t/a", 400),          # deny: root capacity 500
+        ) + _AUDIT),
+    Scenario(
+        "residual_transfer",
+        description="closing a non-empty tool domain keeps its pages "
+                    "accounted to the session chain",
+        programs={"zero": _zero_delay},
+        ops=(("attach", "/", "zero"),
+             ("mkdir", "/s"), ("mkdir", "/s/tool", {"high": 40}),
+             ("charge", "/s/tool", 30),
+             ("rmdir", "/s/tool"),
+             ("exists", "/s/tool"),
+             ("usage", "/s"), ("usage", "/"))),
+    Scenario(
+        "rmdir_release",
+        programs={"zero": _zero_delay},
+        ops=(("attach", "/", "zero"),
+             ("mkdir", "/s"), ("mkdir", "/s/tool"),
+             ("charge", "/s/tool", 30),
+             ("rmdir", "/s/tool", False),
+             ("usage", "/s"), ("usage", "/"))),
+    Scenario(
+        "freeze_thaw_recharge",
+        description="the engine's freeze path: offload (uncharge) + "
+                    "freeze, then thaw + unchecked re-charge round-trips",
+        programs={"zero": _zero_delay},
+        ops=(("attach", "/", "zero"),
+             ("mkdir", "/s"), ("mkdir", "/s/sess"),
+             ("charge", "/s/sess", 80),
+             ("usage", "/"), ("usage", "/s"), ("usage", "/s/sess"),
+             ("uncharge", "/s/sess", 80),
+             ("freeze", "/s/sess"),
+             ("charge", "/s/sess", 1),        # deny: frozen
+             ("usage", "/"),
+             ("thaw", "/s/sess"),
+             ("unchecked", "/s/sess", 80),
+             ("usage", "/"), ("usage", "/s"), ("usage", "/s/sess"))),
+    Scenario(
+        "kill_subtree",
+        description="killed domains stay registered and deny charges",
+        programs={"zero": _zero_delay},
+        ops=(("attach", "/", "zero"),
+             ("mkdir", "/s"), ("mkdir", "/s/a"),
+             ("charge", "/s/a", 40), ("charge", "/s", 10),
+             ("kill", "/s"),
+             ("usage", "/"),
+             ("exists", "/s"), ("exists", "/s/a"),
+             ("charge", "/s", 5), ("charge", "/s/a", 5))),
+    Scenario(
+        "graduated_throttle",
+        description="over-high charges impose graduated windows; charges "
+                    "inside a window stall; windows expire with the clock",
+        programs={"grad": GraduatedThrottleProgram},
+        ops=(("attach", "/", "grad"),) + _std_tree(
+            ("charge", "/t/a/tool", 60, 0),   # over tool high=40 -> window
+            ("charge", "/t/a/tool", 5, 1),    # inside the window
+            ("charge", "/t/b", 150, 2),
+            ("charge", "/t/b", 100, 3),       # max=200 wall
+            ("charge", "/t/b", 30, 4),
+            ("charge", "/t/a/tool", 5, 8),
+            ("charge", "/t/a/tool", 5, 12),   # after the window
+            ("charge", "/t/b", 10, 20),
+        ) + _AUDIT),
+    Scenario(
+        "token_bucket",
+        description="pages-per-step pacing with per-priority refill, "
+                    "across multiple tenant subtrees (multi-shard when "
+                    "the backend shards)",
+        programs={"bucket": lambda: TokenBucketProgram(
+            bucket_capacity=16, refill=(1.0, 2.0, 4.0))},
+        capacity=10_000,
+        ops=(("attach", "/", "bucket"),
+             ("mkdir", "/t0"), ("mkdir", "/t1"), ("mkdir", "/t2"),
+             ("mkdir", "/t2/s", {"priority": D.LOW}),
+             ("charge", "/t2", 16, 0),        # drains /t2's bucket
+             ("charge", "/t2", 8, 1),
+             ("charge", "/t2", 4, 2),
+             ("charge", "/t2", 2, 3),
+             ("charge", "/t0", 16, 4),
+             ("charge", "/t2", 30, 5),
+             ("charge", "/t2/s", 16, 6),
+             ("charge", "/t2/s", 2, 7),       # LOW refill: 1/step
+             ("charge", "/t1", 16, 8),
+             ("usage", "/"), ("usage", "/t0"), ("usage", "/t1"),
+             ("usage", "/t2"))),
+    Scenario(
+        "attach_retune",
+        description="update_params writes the subtree; new children "
+                    "inherit the parent's live row",
+        programs={"grad": GraduatedThrottleProgram},
+        ops=(("attach", "/", "grad"),
+             ("mkdir", "/t"), ("mkdir", "/t/a", {"high": 40}),
+             ("update_params", "/t", {"base_delay_ms": 40.0}),
+             ("mkdir", "/t/a/kid", {"high": 10}),
+             ("charge", "/t/a/kid", 20, 0),   # over 1.0 -> 40*(1+10) = 440
+             ("charge", "/t/a/kid", 1, 5),    # inside the window
+             ("charge", "/t/a/kid", 1, 60),   # window (44 steps) expired
+             ("update_params", "/", {"base_delay_ms": 0.0,
+                                     "max_delay_ms": 0.0}),
+             ("charge", "/t/a/kid", 50, 61))),
+    Scenario(
+        "attach_scope",
+        description="domains outside the attach scope run the program's "
+                    "neutral row (the contract still applies)",
+        programs={"bucket4": lambda: TokenBucketProgram(
+            bucket_capacity=4, refill=(1.0, 1.0, 1.0))},
+        capacity=10_000,
+        ops=(("mkdir", "/scoped"), ("mkdir", "/free"),
+             ("attach", "/scoped", "bucket4"),
+             ("charge", "/scoped", 50, 0),    # deny: bucketed
+             ("charge", "/free", 50, 0))),    # grant: neutral row
+    Scenario(
+        "memcg_events",
+        description="full memcg event counters (host-class backends)",
+        requires=frozenset({"events"}),
+        programs={"grad": GraduatedThrottleProgram},
+        ops=(("attach", "/", "grad"),
+             ("mkdir", "/s", {"high": 10, "max": 50}),
+             ("charge", "/s", 20, 0),         # high breach + throttle
+             ("charge", "/s", 100, 1),        # max breach
+             ("read", "/s", "memory.events"))),
+    Scenario(
+        "intent_lease",
+        description="lease lifecycle: hint-derived high, feedback "
+                    "record, residual moves up on close, idempotent",
+        ops=(("mkdir", "/sess"),
+             ("lease_open", "tool_1", "LOW", "/sess"),
+             ("exists", "/sess/tool_1"),
+             ("read", "/sess/tool_1", "memory.high"),
+             ("charge", "/sess/tool_1", 25),
+             ("lease_feedback", "tool_1", "throttled"),
+             ("lease_close", "tool_1"),
+             ("exists", "/sess/tool_1"),
+             ("usage", "/sess"),
+             ("lease_close", "tool_1"))),     # idempotent: 0
+    Scenario(
+        "control_files",
+        description="the cgroupfs file surface, including freeze-by-write",
+        ops=(("mkdir", "/s", {"high": 100, "max": 200, "low": 10,
+                              "priority": D.HIGH}),
+             ("read", "/s", "memory.high"), ("read", "/s", "memory.max"),
+             ("read", "/s", "memory.low"),
+             ("read", "/s", "memory.priority"),
+             ("write", "/s", "memory.high", 50),
+             ("read", "/s", "memory.high"),
+             ("write", "/s", "cgroup.freeze", 1),
+             ("read", "/s", "cgroup.freeze"),
+             ("charge", "/s", 1),             # deny: frozen
+             ("write", "/s", "cgroup.freeze", 0),
+             ("charge", "/s", 1))),           # grant
+)
+
+_BY_NAME = {s.name: s for s in STANDARD_SCENARIOS}
+
+
+def get_scenario(name: str) -> Scenario:
+    return _BY_NAME[name]
+
+
+# ------------------------------------------------------ factories/features
+
+BACKEND_KINDS = ("host", "device", "sharded",
+                 "async-host", "async-device", "async-sharded")
+
+
+def standard_backend_factory(kind: str) -> Callable:
+    """``kind -> (capacity, n_domains) -> Backend`` for the repo's four
+    backend families (``async-*`` wraps the named inner backend)."""
+
+    def make(capacity: int, n_domains: int):
+        if kind == "host":
+            return HostTreeBackend(capacity)
+        if kind == "device":
+            return DeviceTableBackend(capacity, n_domains=n_domains)
+        if kind == "sharded":
+            from repro.core.sharded import ShardedTableBackend
+            return ShardedTableBackend(capacity, n_domains=n_domains)
+        if kind.startswith("async-"):
+            from repro.core.daemon import AsyncDaemonBackend
+            inner = standard_backend_factory(
+                kind[len("async-"):])(capacity, n_domains)
+            return AsyncDaemonBackend(inner)
+        raise ValueError(f"unknown backend kind {kind!r}")
+
+    make.kind = kind
+    return make
+
+
+def backend_features(kind: str) -> frozenset:
+    """Feature flags a standard backend supports: the host tree (and the
+    async daemon over it) surfaces full memcg event counters."""
+    return frozenset({"events"}) if kind.endswith("host") else frozenset()
+
+
+# ----------------------------------------------------------------- runner
+
+
+@dataclass
+class ScenarioResult:
+    name: str
+    ok: bool
+    skipped: bool = False
+    mismatches: list = field(default_factory=list)
+
+
+@dataclass
+class ConformanceReport:
+    backend: str
+    results: list = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return all(r.ok for r in self.results)
+
+    def summary(self) -> str:
+        lines = [f"conformance[{self.backend}]:"]
+        for r in self.results:
+            if r.skipped:
+                lines.append(f"  {r.name}: SKIPPED (missing feature)")
+            elif r.ok:
+                lines.append(f"  {r.name}: ok")
+            else:
+                lines.append(f"  {r.name}: {len(r.mismatches)} mismatch(es)")
+                lines.extend(f"    {m}" for m in r.mismatches[:8])
+        return "\n".join(lines)
+
+
+class ConformanceSuite:
+    """Replays scenarios against a backend under test and the reference
+    backend, diffing observation streams.  Reference observations are
+    cached per scenario, so one suite instance can certify many
+    backends cheaply."""
+
+    def __init__(self, scenarios: Optional[Sequence[Scenario]] = None,
+                 reference: Optional[Callable] = None):
+        self.scenarios = (list(scenarios) if scenarios is not None
+                          else list(STANDARD_SCENARIOS))
+        self.reference = reference or (lambda cap, n: HostTreeBackend(cap))
+        self._ref_obs: dict[str, list] = {}
+
+    def _reference_obs(self, scenario: Scenario) -> list:
+        if scenario.name not in self._ref_obs:
+            backend = self.reference(scenario.capacity, scenario.n_domains)
+            try:
+                self._ref_obs[scenario.name] = replay(AgentCgroup(backend),
+                                                      scenario)
+            finally:
+                close = getattr(backend, "close", None)
+                if close is not None:
+                    close()
+        return self._ref_obs[scenario.name]
+
+    def run(self, backend_factory: Callable, *,
+            features: frozenset = frozenset(),
+            scenarios: Optional[Sequence[str]] = None,
+            raise_on_failure: bool = False) -> ConformanceReport:
+        name = getattr(backend_factory, "kind",
+                       getattr(backend_factory, "__name__", "backend"))
+        report = ConformanceReport(backend=name)
+        for sc in self.scenarios:
+            if scenarios is not None and sc.name not in scenarios:
+                continue
+            if not sc.requires <= frozenset(features):
+                report.results.append(ScenarioResult(sc.name, True,
+                                                     skipped=True))
+                continue
+            backend = backend_factory(sc.capacity, sc.n_domains)
+            try:
+                got = replay(AgentCgroup(backend), sc)
+            finally:
+                close = getattr(backend, "close", None)
+                if close is not None:
+                    close()                  # stop async daemon threads
+            want = self._reference_obs(sc)
+            mism = [f"op {gi}/{gn}: got {gv!r} want {wv!r}"
+                    for (gi, gn, gv), (wi, wn, wv) in zip(got, want)
+                    if (gi, gn, gv) != (wi, wn, wv)]
+            if len(got) != len(want):
+                mism.append(f"observation count {len(got)} != {len(want)}")
+            report.results.append(ScenarioResult(sc.name, not mism,
+                                                 mismatches=mism))
+        if raise_on_failure and not report.ok:
+            raise AssertionError(report.summary())
+        return report

@@ -1,12 +1,15 @@
 """The unified cgroupfs-style control plane (core/cgroup.py).
 
-Backend parity is the point of the facade: one op sequence, three
-enforcement substrates (host tree / single-device table / sharded
-multi-device table), identical usage/peak/grant results.  Also covers
-the control-file surface, the intent channel's lease lifecycle
-(residual transfer on rmdir), freeze->thaw re-charge parity, and the
-sharded backend's tenant-to-shard placement on 8 fake devices
-(subprocess).
+Backend parity is the point of the facade — and since PR 5 the parity
+machinery lives in ``repro.testing.conformance``: one declarative
+scenario set replayed against every ``Backend`` (host tree /
+single-device table / sharded multi-device table / async lifecycle
+daemon over each) and diffed against the reference host semantics.
+This module certifies all standard backend kinds through that kit,
+pins the canonical scenario to absolute golden values (so reference
+and backends cannot drift together), and keeps the backend-specific
+extras: facade-clock throttle expiry, sharded tenant placement, and
+the 8-fake-device subprocess run.
 """
 import os
 import subprocess
@@ -14,168 +17,92 @@ import sys
 
 import pytest
 
-from repro.core import domains as D
-from repro.core.cgroup import (AgentCgroup, ChargeTicket, DeviceTableBackend,
-                               DomainSpec, HostTreeBackend, ancestor_paths,
-                               parent_path)
+from repro.core.cgroup import (AgentCgroup, DeviceTableBackend, DomainSpec,
+                               HostTreeBackend, ancestor_paths, parent_path)
 from repro.core.controller import ControllerConfig
-from repro.core.intent import Hint
-from repro.core.sharded import ShardedTableBackend
+from repro.testing.conformance import (BACKEND_KINDS, ConformanceSuite,
+                                       OpRecorder, backend_features,
+                                       get_scenario, replay,
+                                       standard_backend_factory)
 
-NO_THROTTLE = ControllerConfig(base_delay_ms=0.0, max_delay_ms=0.0)
-BACKENDS = ["host", "device", "sharded"]
-
-
-def mk_cg(kind: str, cap: int = 500) -> AgentCgroup:
-    # all three backends run the zero-delay program here so grant/deny
-    # parity is independent of op timing; throttling parity (windows,
-    # delays) is covered program-by-program in tests/test_progs.py
-    if kind == "host":
-        from repro.core.progs import GraduatedThrottleProgram
-        return AgentCgroup(HostTreeBackend(
-            cap, prog=GraduatedThrottleProgram(base_delay_ms=0.0,
-                                               max_delay_ms=0.0)))
-    if kind == "sharded":
-        return AgentCgroup(ShardedTableBackend(cap, n_domains=16,
-                                               cfg=NO_THROTTLE))
-    return AgentCgroup(DeviceTableBackend(cap, n_domains=16,
-                                          cfg=NO_THROTTLE))
+# one suite for the whole module: reference observations are computed
+# once per scenario and reused across every parametrized backend kind
+SUITE = ConformanceSuite()
 
 
-def std_tree(cg: AgentCgroup) -> AgentCgroup:
-    cg.mkdir("/t")
-    cg.mkdir("/t/a", DomainSpec(high=120))
-    cg.mkdir("/t/b", DomainSpec(max=200, priority=D.LOW))
-    cg.mkdir("/t/a/tool", DomainSpec(high=40))
-    return cg
+@pytest.mark.parametrize("kind", BACKEND_KINDS)
+def test_backend_conformance(kind):
+    """THE acceptance loop: every backend kind — including the async
+    daemon over each inner backend — certifies itself against the full
+    standard scenario set, bit-identically to the reference."""
+    report = SUITE.run(standard_backend_factory(kind),
+                       features=backend_features(kind))
+    assert report.ok, report.summary()
 
 
-# one op sequence exercising charge/deny, uncharge, freeze/thaw,
-# rmdir-with-residual, and unchecked lifecycle charges
-OPS = [
-    ("charge", "/t/a/tool", 60),      # grant; over tool high
-    ("charge", "/t/b", 150),          # grant
-    ("charge", "/t/b", 100),          # deny: /t/b max=200
-    ("uncharge", "/t/b", 50),
-    ("charge", "/t/b", 100),          # grant now
-    ("freeze", "/t/a", 0),
-    ("charge", "/t/a/tool", 5),       # deny: frozen ancestor
-    ("thaw", "/t/a", 0),
-    ("charge", "/t/a/tool", 5),       # grant again
-    ("rmdir", "/t/a/tool", 0),        # residual 65 transfers to /t/a
-    ("unchecked", "/t/a", 20),        # lifecycle bookkeeping charge
-    ("uncharge", "/t/a", 30),
-    ("charge", "/t/a", 400),          # deny: root capacity 500
-]
-
-# expected state after OPS — identical for BOTH backends by construction
-EXPECTED_GRANTS = [True, True, False, True, False, True, False]
-EXPECTED = {"/": 255, "/t": 255, "/t/a": 55, "/t/b": 200}
-EXPECTED_PEAK = {"/": 285, "/t": 285, "/t/a": 85, "/t/b": 200}
+def test_lifecycle_scenario_absolute_goldens():
+    """Pin the canonical op sequence to absolute values (kit runs are
+    relative to the reference; this guards against co-drift)."""
+    sc = get_scenario("lifecycle")
+    obs = replay(AgentCgroup(standard_backend_factory("host")(
+        sc.capacity, sc.n_domains)), sc)
+    grants = [v[0] for _, n, v in obs if n == "charge"]
+    assert grants == [True, True, False, True, False, True, False]
+    residual = [v for _, n, v in obs if n == "rmdir"]
+    assert residual == [65]
+    usage = {p: u for _, n, (p, u) in
+             ((i, n, v) for i, n, v in obs if n == "usage")}
+    assert usage == {"/": 255, "/t": 255, "/t/a": 55, "/t/b": 200}
+    peak = {p: u for _, n, (p, u) in
+            ((i, n, v) for i, n, v in obs if n == "peak")}
+    assert peak == {"/": 285, "/t": 285, "/t/a": 85, "/t/b": 200}
 
 
-def run_ops(cg: AgentCgroup):
-    grants = []
-    for step, (op, path, amt) in enumerate(OPS):
-        if op == "charge":
-            grants.append(cg.try_charge(path, amt, step=step).granted)
-        elif op == "uncharge":
-            cg.uncharge(path, amt)
-        elif op == "unchecked":
-            cg.charge_unchecked(path, amt)
-        elif op == "freeze":
-            cg.freeze(path)
-        elif op == "thaw":
-            cg.thaw(path)
-        elif op == "rmdir":
-            cg.rmdir(path)
-    return grants
+def test_memcg_events_scenario_absolute_goldens():
+    """The events scenario is host-vs-host for the 'host' kind, so pin
+    the counters to absolute values here (a DomainTree accounting
+    regression must not pass as trivial self-parity)."""
+    sc = get_scenario("memcg_events")
+    obs = replay(AgentCgroup(standard_backend_factory("host")(
+        sc.capacity, sc.n_domains)), sc)
+    events = [v[2] for _, n, v in obs if n == "read"]
+    assert events == [{"high": 1, "max": 1, "throttle": 1, "oom_kill": 0}]
+    charges = [v for _, n, v in obs if n == "charge"]
+    assert charges == [(True, False, 110.0),     # over-high: 10*(1+10*1.0)
+                       (False, True, 100.0)]     # max wall inside window
 
 
-@pytest.mark.parametrize("kind", BACKENDS)
-def test_same_op_sequence_same_results(kind):
-    """THE acceptance loop: one op sequence via AgentCgroup against each
-    backend; grants, usage, and peak must all match the shared golden
-    values (hence each other)."""
-    cg = std_tree(mk_cg(kind))
-    assert run_ops(cg) == EXPECTED_GRANTS
-    for path, want in EXPECTED.items():
-        assert cg.usage(path) == want, (kind, path)
-    for path, want in EXPECTED_PEAK.items():
-        assert cg.peak(path) == want, (kind, path)
+def test_recorder_roundtrips_to_replayable_scenario():
+    """Drive a live cg through the recorder; the recorded scenario
+    replays to identical observations on a fresh backend."""
+    rec = OpRecorder(AgentCgroup(HostTreeBackend(500)))
+    rec.mkdir("/s")
+    rec.mkdir("/s/tool", high=40)
+    rec.try_charge("/s/tool", 30, step=0)
+    rec.write("/s/tool", "memory.high", 20)
+    rec.try_charge("/s/tool", 5, step=1)
+    rec.rmdir("/s/tool")
+    rec.read("/s", "memory.current")
+    sc = rec.to_scenario("recorded")
+    a = replay(AgentCgroup(HostTreeBackend(500)), sc)
+    b = replay(AgentCgroup(DeviceTableBackend(500, n_domains=8)), sc)
+    assert a == b
 
 
-def test_backends_agree_directly():
-    cgs = [std_tree(mk_cg(kind)) for kind in BACKENDS]
-    grants = [run_ops(cg) for cg in cgs]
-    assert grants[0] == grants[1] == grants[2]
-    for path in ["/", "/t", "/t/a", "/t/b"]:
-        assert len({cg.usage(path) for cg in cgs}) == 1, path
-        assert len({cg.peak(path) for cg in cgs}) == 1, path
+@pytest.mark.parametrize("kind", BACKEND_KINDS)
+def test_mkdir_requires_parent(kind):
+    cg = AgentCgroup(standard_backend_factory(kind)(500, 16))
+    with pytest.raises(FileNotFoundError):
+        cg.mkdir("/nope/child")
 
 
-# ------------------------------------------------------- lifecycle parity
-
-
-@pytest.mark.parametrize("kind", BACKENDS)
-def test_rmdir_residual_transfers_to_ancestors(kind):
-    """Closing a non-empty tool domain keeps its retained pages
-    accounted to the session chain (the residual-transfer rule)."""
-    cg = mk_cg(kind)
+def test_read_write_file_validation():
+    cg = AgentCgroup(HostTreeBackend(500))
     cg.mkdir("/s")
-    cg.mkdir("/s/tool", DomainSpec(high=40))
-    assert cg.try_charge("/s/tool", 30).granted
-    residual = cg.rmdir("/s/tool")
-    assert residual == 30
-    assert not cg.exists("/s/tool")
-    assert cg.usage("/s") == 30 and cg.usage("/") == 30
-
-
-@pytest.mark.parametrize("kind", BACKENDS)
-def test_rmdir_without_transfer_releases(kind):
-    cg = mk_cg(kind)
-    cg.mkdir("/s")
-    cg.mkdir("/s/tool")
-    cg.try_charge("/s/tool", 30)
-    cg.rmdir("/s/tool", transfer_residual=False)
-    assert cg.usage("/s") == 0 and cg.usage("/") == 0
-
-
-@pytest.mark.parametrize("kind", BACKENDS)
-def test_freeze_thaw_recharge_parity(kind):
-    """The engine's freeze path: offload (uncharge) + freeze, then thaw
-    + unchecked re-charge; ancestor usage must round-trip exactly."""
-    cg = mk_cg(kind)
-    cg.mkdir("/s")
-    cg.mkdir("/s/sess")
-    assert cg.try_charge("/s/sess", 80).granted
-    before = {p: cg.usage(p) for p in ["/", "/s", "/s/sess"]}
-    pages = cg.usage("/s/sess")
-    cg.uncharge("/s/sess", pages)
-    cg.freeze("/s/sess")
-    assert not cg.try_charge("/s/sess", 1).granted
-    assert cg.usage("/") == 0
-    cg.thaw("/s/sess")
-    cg.charge_unchecked("/s/sess", pages)
-    after = {p: cg.usage(p) for p in ["/", "/s", "/s/sess"]}
-    assert after == before
-
-
-@pytest.mark.parametrize("kind", BACKENDS)
-def test_kill_releases_subtree(kind):
-    cg = mk_cg(kind)
-    cg.mkdir("/s")
-    cg.mkdir("/s/a")
-    cg.try_charge("/s/a", 40)
-    cg.try_charge("/s", 10)
-    freed = cg.kill("/s")
-    assert freed == 50
-    assert cg.usage("/") == 0
-    # killed domains stay registered and deny further charges — on
-    # both backends
-    assert cg.exists("/s") and cg.exists("/s/a")
-    assert not cg.try_charge("/s", 5).granted
-    assert not cg.try_charge("/s/a", 5).granted
+    with pytest.raises(AssertionError):
+        cg.read("/s", "not.a.file")
+    with pytest.raises(AssertionError):
+        cg.write("/s", "memory.current", 3)      # read-only
 
 
 def test_host_driven_throttle_expires_with_facade_clock():
@@ -191,67 +118,6 @@ def test_host_driven_throttle_expires_with_facade_clock():
     assert cg.try_charge("/s", 1).granted        # throttle expired
 
 
-# ------------------------------------------------------------ control files
-
-
-@pytest.mark.parametrize("kind", BACKENDS)
-def test_read_write_files(kind):
-    cg = mk_cg(kind)
-    cg.mkdir("/s", DomainSpec(high=100, max=200, low=10, priority=D.HIGH))
-    assert cg.read("/s", "memory.high") == 100
-    assert cg.read("/s", "memory.max") == 200
-    assert cg.read("/s", "memory.low") == 10
-    assert cg.read("/s", "memory.priority") == D.HIGH
-    cg.write("/s", "memory.high", 50)
-    assert cg.read("/s", "memory.high") == 50
-    cg.write("/s", "cgroup.freeze", 1)
-    assert cg.read("/s", "cgroup.freeze") == 1
-    assert not cg.try_charge("/s", 1).granted
-    cg.write("/s", "cgroup.freeze", 0)
-    assert cg.try_charge("/s", 1).granted
-    with pytest.raises(AssertionError):
-        cg.read("/s", "not.a.file")
-    with pytest.raises(AssertionError):
-        cg.write("/s", "memory.current", 3)      # read-only
-
-
-def test_host_event_counters():
-    cg = mk_cg("host")
-    cg.mkdir("/s", DomainSpec(high=10, max=50))
-    cg.try_charge("/s", 20)                      # high breach
-    cg.try_charge("/s", 100)                     # max breach
-    ev = cg.read("/s", "memory.events")
-    assert ev["high"] == 1 and ev["max"] == 1
-
-
-@pytest.mark.parametrize("kind", BACKENDS)
-def test_mkdir_requires_parent(kind):
-    cg = mk_cg(kind)
-    with pytest.raises(FileNotFoundError):
-        cg.mkdir("/nope/child")
-
-
-# ------------------------------------------------------------ intent channel
-
-
-@pytest.mark.parametrize("kind", BACKENDS)
-def test_intent_lease_lifecycle(kind):
-    cg = mk_cg(kind)
-    cg.mkdir("/sess")
-    lease = cg.intent.declare("tool_1", Hint.LOW, parent="/sess")
-    assert cg.exists("/sess/tool_1")
-    # hint mapped to a memory.high on the tool domain
-    assert cg.read(lease.path, "memory.high") < D.UNLIMITED
-    cg.try_charge(lease.path, 25)
-    fb = lease.feedback("throttled")
-    assert fb.reason == "throttled" and fb.peak_pages == 25
-    resid = lease.close()
-    assert resid == 25 and not cg.exists(lease.path)
-    assert cg.usage("/sess") == 25               # residual moved up
-    assert lease.close() == 0                    # idempotent
-    assert cg.intent.n_declared == 1 and cg.intent.n_feedbacks == 1
-
-
 def test_path_helpers():
     assert parent_path("/") is None
     assert parent_path("/a") == "/"
@@ -262,10 +128,15 @@ def test_path_helpers():
 # ------------------------------------------------------- sharded backend
 
 
+def mk_sharded(cap: int = 500) -> AgentCgroup:
+    return AgentCgroup(standard_backend_factory("sharded")(cap, 16))
+
+
 def test_sharded_tenant_placement_round_robin():
     """Each tenant subtree lands on its own shard; descendants (sessions,
     tool leases) inherit it — the device-group placement rule."""
-    cg = mk_cg("sharded")
+    from repro.core.intent import Hint
+    cg = mk_sharded()
     be = cg.backend
     for t in range(3):
         cg.mkdir(f"/t{t}")
@@ -285,7 +156,7 @@ def test_sharded_device_view_global_handles():
     the owning shard's table, flat results back."""
     import jax.numpy as jnp
     import numpy as np
-    cg = mk_cg("sharded", cap=100)
+    cg = mk_sharded(cap=100)
     cg.mkdir("/t0")
     h = cg.mkdir("/t0/s", DomainSpec(max=30))
     view = cg.device_view()
@@ -308,23 +179,24 @@ _SHARDED_8DEV = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax
-import numpy as np
-from tests.test_cgroup import (BACKENDS, EXPECTED, EXPECTED_GRANTS,
-                               EXPECTED_PEAK, mk_cg, run_ops, std_tree)
+from repro.core.cgroup import AgentCgroup
+from repro.testing.conformance import (ConformanceSuite, backend_features,
+                                       standard_backend_factory)
 
 assert len(jax.devices()) == 8
 
-# 1) canonical op-sequence parity, sharded vs host, on a real 8-shard mesh
-host, shd = std_tree(mk_cg("host")), std_tree(mk_cg("sharded"))
-assert shd.backend.n_shards == 8
-assert run_ops(host) == run_ops(shd) == EXPECTED_GRANTS
-for path, want in EXPECTED.items():
-    assert host.usage(path) == shd.usage(path) == want, path
-for path, want in EXPECTED_PEAK.items():
-    assert host.peak(path) == shd.peak(path) == want, path
+# 1) the full conformance set on a real 8-shard mesh — including the
+# async daemon over the sharded backend, and the token-bucket scenario
+# whose tenants land on shards > 0
+suite = ConformanceSuite()
+for kind in ("sharded", "async-sharded"):
+    report = suite.run(standard_backend_factory(kind),
+                       features=backend_features(kind))
+    assert report.ok, report.summary()
 
 # 2) tenants spread round-robin over distinct shards; root reconciles
-cg = mk_cg("sharded", cap=800)
+cg = AgentCgroup(standard_backend_factory("sharded")(800, 16))
+assert cg.backend.n_shards == 8
 for t in range(8):
     cg.mkdir(f"/t{t}")
     assert cg.try_charge(f"/t{t}", 10 * (t + 1)).granted
@@ -333,25 +205,6 @@ assert cg.usage("/") == sum(10 * (t + 1) for t in range(8))
 
 # 3) global root capacity enforced across shards host-side
 assert not cg.try_charge("/t0", 800).granted
-
-# 4) attached PolicyProgram parity on a real 8-shard mesh: the token
-# bucket rate-limits identically on host and sharded backends, even for
-# a tenant placed on shard > 0
-from repro.core.progs import TokenBucketProgram
-def mk_tb(kind):
-    cg = mk_cg(kind, cap=10_000)
-    cg.attach("/", TokenBucketProgram(bucket_capacity=16,
-                                      refill=(1.0, 2.0, 4.0)))
-    for t in range(3):
-        cg.mkdir(f"/t{t}")
-    return cg
-h, s = mk_tb("host"), mk_tb("sharded")
-assert s.backend.index["/t2"][0] == 2          # placed off shard 0
-for i, (path, amt) in enumerate([("/t2", 16), ("/t2", 8), ("/t2", 4),
-                                 ("/t2", 2), ("/t0", 16), ("/t2", 30)]):
-    hw, sw = h.try_charge(path, amt, step=i), s.try_charge(path, amt, step=i)
-    assert (hw.granted, hw.stalled) == (sw.granted, sw.stalled), (i, path)
-assert h.usage("/") == s.usage("/")
 print("SHARDED8 OK")
 """
 

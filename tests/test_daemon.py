@@ -1,0 +1,329 @@
+"""The async lifecycle daemon backend (core/daemon.py).
+
+Conformance (bit-exactness with the inner backend) is certified in
+``tests/test_cgroup.py`` through the kit; this module covers the
+daemon-specific semantics: FIFO epochs and deferred batching, work
+running on the daemon thread (never the caller's), snapshot epoch
+tags, deferred-error surfacing at flush, eager mode, fail-fast on a
+wedged/dead daemon, and the residual-transfer-exactly-once regression
+for lifecycle ops racing queued charges — on all four backend kinds.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import domains as D
+from repro.core.cgroup import (AgentCgroup, DeviceTableBackend, DomainSpec,
+                               HostTreeBackend)
+from repro.core.daemon import AsyncDaemonBackend, DaemonError
+from repro.testing.conformance import BACKEND_KINDS, standard_backend_factory
+
+
+class SpyInner:
+    """Transparent wrapper recording (method, thread-id) per applied op,
+    with optional per-method gates that block until released."""
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.calls = []
+        self.gates: dict[str, threading.Event] = {}
+
+    def __getattr__(self, name):
+        attr = getattr(self._inner, name)
+        if not callable(attr) or name.startswith("_"):
+            return attr
+
+        def wrapper(*a, **k):
+            gate = self.gates.get(name)
+            if gate is not None:
+                assert gate.wait(timeout=30.0), f"gate for {name} never set"
+            self.calls.append((name, threading.get_ident()))
+            return attr(*a, **k)
+
+        return wrapper
+
+    def applied(self, name):
+        return [c for c in self.calls if c[0] == name]
+
+
+def mk_async(eager=False, **kw):
+    spy = SpyInner(HostTreeBackend(500))
+    be = AsyncDaemonBackend(spy, eager=eager, **kw)
+    return AgentCgroup(be), be, spy
+
+
+# ----------------------------------------------------------- epochs / FIFO
+
+
+def test_deferred_ops_batch_into_one_epoch_in_order():
+    cg, be, spy = mk_async()
+    cg.mkdir("/s")                        # result op: applies immediately
+    e0 = be.flush()
+    cg.write("/s", "memory.high", 50)
+    cg.freeze("/s")
+    cg.thaw("/s")
+    # deferred mode: nothing applied until the epoch boundary
+    assert not spy.applied("write") and not spy.applied("freeze")
+    e1 = be.flush()
+    assert e1 == e0 + 1                   # three ops -> ONE epoch
+    names = [n for n, _ in spy.calls]
+    i_w, i_f, i_t = (names.index(x) for x in ("write", "freeze", "thaw"))
+    assert i_w < i_f < i_t                # FIFO order preserved
+    assert cg.read("/s", "memory.high") == 50
+    assert cg.read("/s", "cgroup.freeze") == 0
+    be.close()
+
+
+def test_mutations_run_on_daemon_thread_not_caller():
+    """All lifecycle mutations apply on the daemon thread; only flushing
+    reads execute on the caller."""
+    cg, be, spy = mk_async()
+    cg.mkdir("/s")
+    cg.freeze("/s")
+    cg.try_charge("/s", 5)
+    be.flush()
+    mutating = {"mkdir", "freeze", "try_charge"}
+    tids = {t for n, t in spy.calls if n in mutating}
+    assert tids == {be._thread.ident}
+    assert threading.get_ident() not in tids
+    be.close()
+
+
+def test_fire_and_forget_never_blocks_caller():
+    """A lifecycle op whose inner application is blocked still returns
+    instantly to the caller — measurably off the critical path."""
+    cg, be, spy = mk_async()
+    cg.mkdir("/s")
+    be.flush()
+    spy.gates["freeze"] = threading.Event()          # block the apply
+    t0 = time.perf_counter()
+    cg.freeze("/s")                                  # enqueue only
+    assert time.perf_counter() - t0 < 0.5
+    assert not spy.applied("freeze")
+    spy.gates["freeze"].set()
+    be.flush()
+    assert spy.applied("freeze")
+    assert cg.read("/s", "cgroup.freeze") == 1
+    be.close()
+
+
+def test_reads_flush_and_snapshot_is_epoch_tagged():
+    cg, be, spy = mk_async()
+    cg.mkdir("/s")
+    cg.write("/s", "memory.high", 70)                # queued
+    assert cg.read("/s", "memory.high") == 70        # read forced the epoch
+    snap = cg.snapshot()
+    assert snap["epoch"] == be.epoch
+    assert snap["usage"][snap["index"]["/s"]] == 0
+    be.close()
+
+
+def test_result_ops_match_synchronous_backend():
+    sync = AgentCgroup(HostTreeBackend(500))
+    cg, be, _ = mk_async()
+    for c in (sync, cg):
+        c.mkdir("/s")
+        c.mkdir("/s/tool", DomainSpec(high=40))
+        assert c.try_charge("/s/tool", 30).granted
+        c.mkdir("/k")
+        c.charge_unchecked("/k", 7)
+    assert cg.handle("/s") == sync.handle("/s")
+    assert cg.rmdir("/s/tool") == sync.rmdir("/s/tool") == 30
+    assert cg.kill("/k") == sync.kill("/k") == 7
+    assert cg.usage("/") == sync.usage("/")
+    be.close()
+
+
+# ------------------------------------------------------------------ errors
+
+
+def test_deferred_error_surfaces_at_next_flush():
+    cg, be, _ = mk_async()
+    cg.mkdir("/s")
+    be.flush()
+    be.write("/s", "not.a.file", 1)       # bypass facade validation
+    with pytest.raises(DaemonError) as ei:
+        be.flush()
+    assert isinstance(ei.value.__cause__, KeyError)
+    # the daemon survives a bad op: the backend stays usable
+    assert cg.try_charge("/s", 5).granted
+    be.close()
+
+
+def test_result_op_error_propagates_directly():
+    cg, be, _ = mk_async()
+    with pytest.raises(KeyError):
+        be.rmdir("/nope", True)
+    be.close()
+
+
+def test_close_stops_daemon_even_when_drain_flush_raises():
+    """A pending deferred-op failure surfaces from close()'s drain
+    flush, but the daemon thread must still be stopped."""
+    cg, be, _ = mk_async()
+    cg.mkdir("/s")
+    be.write("/s", "not.a.file", 1)       # deferred failure pending
+    with pytest.raises(DaemonError):
+        be.close()
+    assert not be._thread.is_alive()
+    with pytest.raises(DaemonError, match="closed"):
+        cg.freeze("/s")
+
+
+def test_submit_after_close_raises():
+    cg, be, _ = mk_async()
+    be.close()
+    with pytest.raises(DaemonError):
+        cg.freeze("/")
+
+
+def test_wedged_daemon_fails_fast_not_hangs():
+    """A stuck inner op makes flush raise DaemonError within the
+    timeout instead of deadlocking the caller (CI pairs this with
+    pytest-timeout for the workflow-level guarantee)."""
+    cg, be, spy = mk_async(flush_timeout_s=0.3)
+    cg.mkdir("/s")
+    be.flush()
+    spy.gates["freeze"] = threading.Event()          # never set -> wedged
+    cg.freeze("/s")
+    t0 = time.perf_counter()
+    with pytest.raises(DaemonError, match="timed out"):
+        be.flush()
+    assert time.perf_counter() - t0 < 5.0
+    # the timed-out work may still apply later, so the backend is
+    # poisoned: no caller may keep using state it can no longer trust
+    with pytest.raises(DaemonError, match="close and rebuild"):
+        cg.freeze("/s")
+    with pytest.raises(DaemonError, match="close and rebuild"):
+        be.flush()
+    spy.gates["freeze"].set()                        # unwedge + clean up
+    be.close()
+    assert not be._thread.is_alive()
+
+
+# -------------------------------------------------------------- eager mode
+
+
+def test_eager_mode_applies_without_flush():
+    cg, be, spy = mk_async(eager=True)
+    cg.mkdir("/s")
+    cg.write("/s", "memory.high", 99)
+    deadline = time.time() + 10.0
+    while not spy.applied("write") and time.time() < deadline:
+        time.sleep(0.005)
+    assert spy.applied("write")                      # no flush needed
+    assert be._thread.ident in {t for _, t in spy.calls}
+    assert cg.read("/s", "memory.high") == 99
+    be.close()
+
+
+def test_eager_reads_never_observe_mid_batch_state():
+    """Reads from another thread while the eager daemon applies a
+    stream of lifecycle ops must always see whole epochs — never a
+    half-applied batch (e.g. a dict mutating mid-iteration)."""
+    cg = AgentCgroup(AsyncDaemonBackend(HostTreeBackend(10_000),
+                                        eager=True))
+    cg.mkdir("/t")
+    stop = threading.Event()
+    errors: list[BaseException] = []
+
+    def reader():
+        try:
+            while not stop.is_set():
+                snap = cg.snapshot()
+                assert snap["epoch"] <= cg.backend.epoch
+                for p in cg.paths():
+                    try:
+                        cg.read(p, "memory.current")
+                    except KeyError:
+                        pass             # rmdir'd between reads — fine
+        except BaseException as e:           # noqa: BLE001 — surfaced below
+            errors.append(e)
+
+    t = threading.Thread(target=reader)
+    t.start()
+    try:
+        for i in range(120):
+            cg.mkdir(f"/t/s{i}")
+            cg.charge_unchecked(f"/t/s{i}", 3)
+            if i % 3 == 0:
+                cg.rmdir(f"/t/s{i}")
+    finally:
+        stop.set()
+        t.join(timeout=30.0)
+    assert not errors, errors[0]
+    cg.backend.close()
+
+
+def test_context_manager_closes():
+    with AsyncDaemonBackend(HostTreeBackend(100)) as be:
+        AgentCgroup(be).mkdir("/s")
+    assert not be._thread.is_alive()
+    with pytest.raises(DaemonError):
+        be.flush()
+
+
+# ------------------------- residual-transfer-exactly-once (regression)
+
+
+@pytest.mark.parametrize("kind", BACKEND_KINDS)
+def test_rmdir_racing_inflight_charges_transfers_residual_once(kind):
+    """``rmdir`` racing an in-flight charge batch (queued, on the async
+    backends) must transfer the residual to the parent exactly once —
+    no lost charges, no double-uncharge — on all four backend kinds."""
+    cg = AgentCgroup(standard_backend_factory(kind)(500, 16))
+    cg.mkdir("/s")
+    cg.mkdir("/s/tool", DomainSpec(high=40))
+    assert cg.try_charge("/s/tool", 30).granted
+    cg.flush()
+    # in-flight: these are still queued when rmdir is submitted (async);
+    # FIFO ordering must serialize them before the removal
+    cg.charge_unchecked("/s/tool", 12)
+    cg.uncharge("/s/tool", 2)
+    residual = cg.rmdir("/s/tool")
+    assert residual == 40
+    for _ in range(2):                    # re-flushing must not re-apply
+        cg.flush()
+        assert not cg.exists("/s/tool")
+        assert cg.usage("/s") == 40 and cg.usage("/") == 40
+    close = getattr(cg.backend, "close", None)
+    if close:
+        close()
+
+
+@pytest.mark.parametrize("kind", BACKEND_KINDS)
+def test_kill_racing_inflight_charges_releases_once(kind):
+    cg = AgentCgroup(standard_backend_factory(kind)(500, 16))
+    cg.mkdir("/k")
+    cg.mkdir("/k/a")
+    assert cg.try_charge("/k/a", 40).granted
+    cg.charge_unchecked("/k/a", 5)        # queued on async backends
+    freed = cg.kill("/k")
+    assert freed == 45
+    for _ in range(2):
+        cg.flush()
+        assert cg.usage("/") == 0
+        assert not cg.try_charge("/k/a", 1).granted   # killed stays denied
+    close = getattr(cg.backend, "close", None)
+    if close:
+        close()
+
+
+def test_concurrent_flushes_apply_exactly_once():
+    """Many threads flushing while fire-and-forget charges are queued:
+    every op applies once, in order, and the final rmdir sees them."""
+    cg = AgentCgroup(AsyncDaemonBackend(HostTreeBackend(500)))
+    cg.mkdir("/s")
+    cg.mkdir("/s/tool")
+    assert cg.try_charge("/s/tool", 30).granted
+    for _ in range(8):
+        cg.charge_unchecked("/s/tool", 1)
+    threads = [threading.Thread(target=cg.backend.flush) for _ in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30.0)
+    assert cg.rmdir("/s/tool") == 38
+    assert cg.usage("/s") == 38 and cg.usage("/") == 38
+    cg.backend.close()

@@ -130,6 +130,26 @@ def test_domain_accounting_clean_at_end(model):
     assert eng.cg.usage("/") == 0
 
 
+def test_async_backend_bitexact_with_device(model):
+    """The async lifecycle daemon's acceptance claim: wrapping the
+    device backend and deferring all lifecycle ops to step-boundary
+    epochs reproduces the synchronous run bit-exactly — every metric in
+    the report, same seed, same workload — while the jitted enforcement
+    path never blocks on lifecycle work."""
+    dev = run_mode(model, "inkernel", use_freeze=True,
+                   session_high={"lo1": 12, "lo2": 12})
+    asy = run_mode(model, "inkernel", backend="async", use_freeze=True,
+                   session_high={"lo1": 12, "lo2": 12})
+    assert asy.report() == dev.report()
+    assert asy.report()["survival"] == 1.0
+    assert asy.cg.usage("/") == 0
+    from repro.core.daemon import AsyncDaemonBackend
+    assert isinstance(asy.cg.backend, AsyncDaemonBackend)
+    assert asy.cg.backend.epoch > 0       # lifecycle really ran in epochs
+    asy.close()
+    assert not asy.cg.backend._thread.is_alive()
+
+
 def test_sharded_backend_serves_multitenant(model):
     """Same workload on the ShardedTableBackend: in-step enforcement now
     runs per device group under shard_map, but the guarantees (survival,

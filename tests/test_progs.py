@@ -3,10 +3,13 @@
 Three claims, each load-bearing for the redesign:
 
   * PARITY — one op sequence with the same program attached runs
-    bit-identically (grants, stalls, usage, peak, throttle windows) on
-    all three backends: host tree, device table, sharded table.  Holds
-    for the stock graduated program, the token bucket, and a custom
-    program defined right here (the surface is user-extensible).
+    bit-identically (grants, stalls, delays, usage, peak) on every
+    backend kind — host tree, device table, sharded table, and the
+    async daemon over each.  Since PR 5 this is certified through the
+    backend-conformance kit (``repro.testing.conformance``): the stock
+    programs ride in the standard scenario set, and the custom program
+    defined right here certifies via an extra scenario (the surface is
+    user-extensible AND user-certifiable).
   * LIVE RETUNE — ``cg.update_params`` on a live jitted consumer is a
     pure state write: zero retraces (asserted via jit cache size and a
     trace counter), new curve effective on the following charge.
@@ -25,18 +28,15 @@ from repro.core.cgroup import (AgentCgroup, DeviceTableBackend, DomainSpec,
                                HostTreeBackend)
 from repro.core.progs import (GraduatedThrottleProgram, PolicyProgram,
                               TokenBucketProgram, Verdict)
-from repro.core.sharded import ShardedTableBackend
+from repro.testing.conformance import (BACKEND_KINDS, ConformanceSuite,
+                                       Scenario, backend_features,
+                                       standard_backend_factory)
 
 BACKENDS = ["host", "device", "sharded"]
 
 
 def mk_cg(kind: str, prog: PolicyProgram, cap: int = 500) -> AgentCgroup:
-    if kind == "host":
-        cg = AgentCgroup(HostTreeBackend(cap))
-    elif kind == "sharded":
-        cg = AgentCgroup(ShardedTableBackend(cap, n_domains=16))
-    else:
-        cg = AgentCgroup(DeviceTableBackend(cap, n_domains=16))
+    cg = AgentCgroup(standard_backend_factory(kind)(cap, 16))
     cg.attach("/", prog)
     cg.mkdir("/t")
     cg.mkdir("/t/a", DomainSpec(high=40))
@@ -67,63 +67,45 @@ class BurstCapProgram(GraduatedThrottleProgram):
                        base.delay_ms, base.params)
 
 
-# ops on the integer step clock: over-``high`` charges impose throttle
-# windows, charges inside a window stall, windows expire with the clock
-OPS = [
-    (0, "/t/a", 60),       # over high=40 -> graduated window
-    (1, "/t/a", 5),        # inside the window
-    (2, "/t/b", 150),
-    (3, "/t/b", 100),      # /t/b max=200 wall
-    (4, "/t/b", 30),
-    (8, "/t/a", 5),        # after the window
-    (12, "/t/a", 5),
-    (20, "/t/b", 10),
+# custom-program scenarios for the conformance kit: over-``high``
+# charges impose throttle windows, charges inside a window stall,
+# windows expire with the clock, and the burst cap denies what the
+# graduated contract alone would grant
+_PROG_OPS = (("attach", "/", "prog"),
+             ("mkdir", "/t"),
+             ("mkdir", "/t/a", {"high": 40}),
+             ("mkdir", "/t/b", {"max": 200, "priority": D.LOW}),
+             ("charge", "/t/a", 60, 0),    # over high=40 -> window
+             ("charge", "/t/a", 5, 1),     # inside the window
+             ("charge", "/t/b", 150, 2),
+             ("charge", "/t/b", 100, 3),   # /t/b max=200 wall
+             ("charge", "/t/b", 30, 4),
+             ("charge", "/t/a", 5, 8),     # after the window
+             ("charge", "/t/a", 5, 12),
+             ("charge", "/t/b", 10, 20),
+             ("charge", "/t/a", 120, 21))  # > burst_cap where attached
+
+CUSTOM_SCENARIOS = [
+    Scenario("prog_" + name, ops=_PROG_OPS, programs={"prog": factory})
+    for name, factory in {
+        "graduated": GraduatedThrottleProgram,
+        "token_bucket": lambda: TokenBucketProgram(bucket_capacity=64,
+                                                   refill=(2.0, 8.0, 32.0)),
+        "burst_cap": lambda: BurstCapProgram(burst_cap=100),
+    }.items()
 ]
 
-PROGRAMS = {
-    "graduated": lambda: GraduatedThrottleProgram(),
-    "token_bucket": lambda: TokenBucketProgram(bucket_capacity=64,
-                                               refill=(2.0, 8.0, 32.0)),
-    "burst_cap": lambda: BurstCapProgram(burst_cap=100),
-}
+CUSTOM_SUITE = ConformanceSuite(scenarios=CUSTOM_SCENARIOS)
 
 
-def run_ops(cg: AgentCgroup):
-    out = []
-    for step, path, amt in OPS:
-        t = cg.try_charge(path, amt, step=step)
-        out.append((t.granted, t.stalled, round(t.delay_ms, 3)))
-    return out
-
-
-def windows(cg: AgentCgroup) -> dict:
-    be = cg.backend
-    out = {}
-    for p in ["/t/a", "/t/b"]:
-        if isinstance(be, HostTreeBackend):
-            out[p] = int(be.tree.get(p).throttle_until)
-        elif isinstance(be, ShardedTableBackend):
-            s, i = be.index[p]
-            out[p] = int(be.state["throttle_until"][s, i])
-        else:
-            out[p] = int(be.table.state["throttle_until"][be.table.index[p]])
-    return out
-
-
-@pytest.mark.parametrize("prog_name", list(PROGRAMS))
-def test_program_parity_across_backends(prog_name):
-    """THE acceptance loop of the redesign: identical grants, stalls,
-    delays, usage, peak, and throttle windows on every backend, for
-    stock and custom programs alike."""
-    cgs = {k: mk_cg(k, PROGRAMS[prog_name]()) for k in BACKENDS}
-    results = {k: run_ops(cg) for k, cg in cgs.items()}
-    assert results["host"] == results["device"] == results["sharded"], \
-        prog_name
-    for path in ["/", "/t", "/t/a", "/t/b"]:
-        assert len({cg.usage(path) for cg in cgs.values()}) == 1, path
-        assert len({cg.peak(path) for cg in cgs.values()}) == 1, path
-    wins = {k: windows(cg) for k, cg in cgs.items()}
-    assert wins["host"] == wins["device"] == wins["sharded"], prog_name
+@pytest.mark.parametrize("kind", BACKEND_KINDS)
+def test_custom_programs_certify_via_conformance_kit(kind):
+    """THE acceptance loop of the redesign, now one kit call: identical
+    grants, stalls, delays, usage, and peak on every backend kind, for
+    stock and test-local custom programs alike."""
+    report = CUSTOM_SUITE.run(standard_backend_factory(kind),
+                              features=backend_features(kind))
+    assert report.ok, report.summary()
 
 
 def test_graduated_program_throttles_and_expires():

@@ -18,10 +18,13 @@ pytest.importorskip("hypothesis")
 
 import hypothesis.strategies as st
 from hypothesis import given, settings
+from hypothesis.stateful import (RuleBasedStateMachine, rule,
+                                 run_state_machine_as_test)
 
 from repro.core import domains as D
 from repro.core.cgroup import AgentCgroup, DomainSpec, HostTreeBackend
 from repro.core.controller import ControllerConfig
+from repro.core.daemon import AsyncDaemonBackend
 from repro.core.progs import GraduatedThrottleProgram
 
 
@@ -198,3 +201,136 @@ def test_update_params_parity_under_fuzz(op_list):
     for path in PATHS + ["/"]:
         assert dev.usage(path) == host.usage(path), path
         assert dev.peak(path) == host.peak(path), path
+
+
+# ------------------------------ async daemon vs inner backend (stateful)
+
+
+class AsyncVsInnerMachine(RuleBasedStateMachine):
+    """Random interleavings of lifecycle ops and charges against
+    ``AsyncDaemonBackend`` vs. its inner backend driven synchronously:
+    after every rule the async side is flushed to an epoch boundary and
+    the two trees must be state-equivalent (the wrapper's bit-exactness
+    contract).  Result-bearing ops (charge grants/stalls/delays, rmdir
+    residuals, kill frees) are compared inline as well."""
+
+    POOL = ["/a", "/b", "/a/s", "/b/s", "/a/s/tool"]
+    SPECS = {"/a": {"high": 120}, "/b": {"max": 300, "priority": D.LOW},
+             "/a/s": {}, "/b/s": {"high": 60}, "/a/s/tool": {"high": 40}}
+
+    def __init__(self):
+        super().__init__()
+        self.sync = AgentCgroup(HostTreeBackend(800))
+        self.asyn = AgentCgroup(AsyncDaemonBackend(HostTreeBackend(800),
+                                                   flush_timeout_s=30.0))
+        self.step = 0
+
+    def both(self):
+        return (self.sync, self.asyn)
+
+    def teardown(self):
+        self.asyn.backend.close()
+
+    def _exists(self, path):
+        return self.sync.exists(path)
+
+    # ---- lifecycle ----
+
+    @rule(path=st.sampled_from(POOL))
+    def mkdir(self, path):
+        from repro.core.cgroup import parent_path
+        if self._exists(path) or not self._exists(parent_path(path)):
+            return
+        for cg in self.both():
+            cg.mkdir(path, DomainSpec(**self.SPECS[path]))
+
+    @rule(path=st.sampled_from(POOL))
+    def rmdir_leaf(self, path):
+        if not self._exists(path):
+            return
+        if any(p != path and p.startswith(path + "/")
+               for p in self.sync.paths()):
+            return                                   # only leaves
+        r_s = self.sync.rmdir(path)
+        r_a = self.asyn.rmdir(path)
+        assert r_s == r_a, (path, r_s, r_a)
+
+    @rule(path=st.sampled_from(POOL))
+    def freeze(self, path):
+        if self._exists(path):
+            for cg in self.both():
+                cg.freeze(path)
+
+    @rule(path=st.sampled_from(POOL))
+    def thaw(self, path):
+        if self._exists(path):
+            for cg in self.both():
+                cg.thaw(path)
+
+    @rule(path=st.sampled_from(POOL))
+    def kill(self, path):
+        if not self._exists(path):
+            return
+        k_s = self.sync.kill(path)
+        k_a = self.asyn.kill(path)
+        assert k_s == k_a, (path, k_s, k_a)
+
+    @rule(path=st.sampled_from(POOL), val=st.integers(1, 400))
+    def write_high(self, path, val):
+        if self._exists(path):
+            for cg in self.both():
+                cg.write(path, "memory.high", val)
+
+    @rule(knob=st.sampled_from(["base_delay_ms", "overage_gain",
+                                "max_delay_ms"]),
+          val=st.integers(0, 200))
+    def retune(self, knob, val):
+        for cg in self.both():
+            cg.update_params("/", **{knob: float(val)})
+
+    # ---- charging ----
+
+    @rule(path=st.sampled_from(POOL), amt=st.integers(1, 150))
+    def charge(self, path, amt):
+        if not self._exists(path):
+            return
+        w = self.sync.try_charge(path, amt, step=self.step)
+        g = self.asyn.try_charge(path, amt, step=self.step)
+        self.step += 1
+        assert (w.granted, w.stalled, w.delay_ms) == \
+               (g.granted, g.stalled, g.delay_ms), (path, amt)
+
+    @rule(path=st.sampled_from(POOL), amt=st.integers(1, 80))
+    def uncharge(self, path, amt):
+        if not self._exists(path):
+            return
+        take = min(amt, self.sync.usage(path))
+        if take > 0:
+            for cg in self.both():
+                cg.uncharge(path, take)
+
+    @rule(path=st.sampled_from(POOL), amt=st.integers(1, 40))
+    def unchecked(self, path, amt):
+        if self._exists(path):
+            for cg in self.both():
+                cg.charge_unchecked(path, amt)
+
+    # ---- the equivalence check ----
+
+    @rule()
+    def epoch_flushed_equivalence(self):
+        epoch = self.asyn.flush()
+        assert isinstance(epoch, int)
+        assert sorted(self.sync.paths()) == sorted(self.asyn.paths())
+        for p in self.sync.paths():
+            assert self.asyn.usage(p) == self.sync.usage(p), p
+            assert self.asyn.peak(p) == self.sync.peak(p), p
+            assert (self.asyn.read(p, "memory.events")
+                    == self.sync.read(p, "memory.events")), p
+
+
+def test_async_daemon_matches_inner_backend_stateful():
+    run_state_machine_as_test(
+        AsyncVsInnerMachine,
+        settings=settings(max_examples=15, stateful_step_count=25,
+                          deadline=None))
