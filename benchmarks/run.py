@@ -3,6 +3,7 @@
   characterization   §3 Figs 1-7 / Table 1 (workload statistics)
   mismatch           §4 Table 2 (granularity/responsiveness/adaptability)
   fig8_replay        §6 Fig 8 (trace replay: survival + P95 latency)
+  escalation_waste   §6 semantic OOM escalation (retry completion + waste)
   engine_fig8        beyond-paper: Fig 8 on the live serving engine
   throttle_precision §6 kernel-selftest analogue (2000 ms +/- 2.3%)
   roofline_table     dry-run roofline baselines (if results/ present)
@@ -17,11 +18,12 @@ import time
 def main() -> None:
     t0 = time.time()
     from benchmarks import (characterization, engine_fig8,
-                            engine_overhead, fig8_replay, mismatch,
-                            throttle_precision)
+                            engine_overhead, escalation_waste, fig8_replay,
+                            mismatch, throttle_precision)
     characterization.run()
     mismatch.run()
     fig8_replay.run()
+    escalation_waste.run(n=4)
     engine_fig8.run()
     engine_overhead.run()
     throttle_precision.run()

@@ -55,7 +55,7 @@ from typing import Optional, Protocol, Union, runtime_checkable
 import numpy as np
 
 from repro.core import domains as D
-from repro.core.events import Ev, EventLog
+from repro.core.events import Ev, EventLog, OomEvent
 from repro.core.intent import Feedback, Hint, hint_to_high, make_feedback
 from repro.core.progs import (ChainView, PolicyProgram, Request, as_program,
                               charge_decision, path_in_scope)
@@ -375,9 +375,42 @@ class HostTreeBackend:
         return {"paths": order, "index": prow, "usage": usage, "high": high,
                 "max": maxl, "parent": parent, "active": active,
                 "params": params,
+                "peak": np.array([idx[p].peak for p in order], np.int64),
+                "low": np.array([idx[p].low for p in order], np.int64),
+                "priority": np.array([idx[p].priority for p in order],
+                                     np.int64),
+                "frozen": np.array([idx[p].frozen for p in order], bool),
+                "killed": np.array([idx[p].killed for p in order], bool),
                 "throttle_until": np.array([idx[p].throttle_until
                                             for p in order]),
                 "root_usage": self.tree.root.usage}
+
+    def restore(self, snap: dict) -> None:
+        """Rebuild the full control state from a ``snapshot()`` dict —
+        the crash-recovery path: a poisoned async daemon is closed and
+        a freshly constructed backend resumes from the last good
+        snapshot.  Call after ``attach`` (parameter rows are restored
+        verbatim from the snapshot, overwriting attach's defaults)."""
+        idx = snap["index"]
+        zeros = np.zeros(len(snap["paths"]), bool)
+        killed = snap.get("killed", zeros)
+        frozen = snap.get("frozen", zeros)
+        for p in snap["paths"]:           # parents precede children
+            if p != "/" and not self.tree.exists(p):
+                self.mkdir(p, DomainSpec())
+            d = self.tree.root if p == "/" else self.tree.get(p)
+            i = idx[p]
+            d.high = int(snap["high"][i])
+            d.max = int(snap["max"][i])
+            d.usage = int(snap["usage"][i])
+            d.throttle_until = float(snap["throttle_until"][i])
+            d.frozen = bool(frozen[i])
+            d.killed = bool(killed[i])
+            if "peak" in snap:
+                d.peak = int(snap["peak"][i])
+                d.low = int(snap["low"][i])
+                d.priority = int(snap["priority"][i])
+            self._rows[p] = np.asarray(snap["params"][i]).copy()
 
     def set_time(self, t: float) -> None:
         self.tree.now_ms = t
@@ -602,9 +635,41 @@ class DeviceTableBackend:
                 "max": np.asarray(st["max"]),
                 "parent": np.asarray(st["parent"]),
                 "active": np.asarray(st["active"]),
+                "peak": np.asarray(st["peak"]),
+                "low": np.asarray(st["low"]),
+                "priority": np.asarray(st["priority"]),
+                "frozen": np.asarray(st["frozen"]),
                 "throttle_until": np.asarray(st["throttle_until"]),
                 "params": np.asarray(st["prog"]),
                 "root_usage": int(st["usage"][0])}
+
+    def restore(self, snap: dict) -> None:
+        """Rebuild index + device state from a ``snapshot()`` dict —
+        the crash-recovery path (see ``HostTreeBackend.restore``).
+        Call on a freshly constructed backend of the same ``n_domains``,
+        after ``attach``."""
+        import heapq
+
+        import jax.numpy as jnp
+        t = self.table
+        assert len(snap["usage"]) == t.n, "snapshot/table shape mismatch"
+        t.index = dict(snap["index"])
+        used = set(t.index.values())
+        t._free = [i for i in range(1, t.n) if i not in used]
+        heapq.heapify(t._free)
+        st = dict(t.state)
+        for key, src, dtype in (
+                ("usage", "usage", jnp.int32), ("peak", "peak", jnp.int32),
+                ("high", "high", jnp.int32), ("max", "max", jnp.int32),
+                ("low", "low", jnp.int32), ("parent", "parent", jnp.int32),
+                ("priority", "priority", jnp.int32),
+                ("frozen", "frozen", jnp.bool_),
+                ("active", "active", jnp.bool_),
+                ("throttle_until", "throttle_until", jnp.int32),
+                ("prog", "params", jnp.float32)):
+            if src in snap:
+                st[key] = jnp.asarray(np.asarray(snap[src]), dtype)
+        t.state = st
 
     def set_time(self, t: float) -> None:
         self._now = t
@@ -618,14 +683,23 @@ class Lease:
     """A declared tool-call scope: an ephemeral child domain whose
     ``memory.high`` came from the upward intent hint.  Closing the lease
     removes the domain and moves retained pages up to the parent
-    (retry/context accumulation — the paper's residual-transfer rule)."""
+    (retry/context accumulation — the paper's residual-transfer rule).
+
+    ``attempt`` counts re-declarations of the same tool call by the
+    escalation loop; a kill on the lease's domain marks it ``killed``
+    and attaches the typed ``OomEvent`` (semantic OOM feedback)."""
     channel: "IntentChannel"
     tool_id: str
     path: str
     parent: str
     hint: Optional[Hint]
     high: int
+    priority: int = D.NORMAL
+    max: int = UNLIMITED
+    attempt: int = 1
     closed: bool = False
+    killed: bool = False
+    oom: Optional[OomEvent] = None
 
     def feedback(self, reason: str, peak: Optional[int] = None,
                  limit: Optional[int] = None) -> Feedback:
@@ -640,15 +714,19 @@ class Lease:
         it is never denied and counts no breach events.  The DONE event
         (with ``memory.peak``) lands in the backend's log; on the
         device backend that read costs one host sync, at lifecycle
-        rate, not step rate."""
+        rate, not step rate.  A killed lease emits no DONE — the kill
+        already emitted OOM_KILL + OOM; close() only reclaims the
+        (empty) domain so the tool id can be re-declared."""
         if self.closed:
             return 0
         self.closed = True
+        self.channel._open.pop(self.path, None)
         cg = self.channel.cg
         if not cg.exists(self.path):
             return 0
-        cg.log.emit(cg.now, Ev.DONE, self.path,
-                    peak=cg.read(self.path, "memory.peak"))
+        if not self.killed:
+            cg.log.emit(cg.now, Ev.DONE, self.path,
+                        peak=cg.read(self.path, "memory.peak"))
         return cg.rmdir(self.path, transfer_residual=transfer_residual)
 
 
@@ -659,23 +737,36 @@ class IntentChannel:
     domain whose ``memory.high`` derives from the hint (mis-declared
     calls throttle early instead of starving siblings).  Downward:
     ``feedback`` emits the structured record an adaptive agent uses to
-    reconstruct its strategy.
+    reconstruct its strategy, and any ``kill()`` that lands on an open
+    lease produces a typed ``OomEvent`` delivered to the owning session
+    (``oom_events``) — the exit-137 -> stderr loop of the paper's §6
+    wrapper, made structural.
     """
 
     def __init__(self, cg: "AgentCgroup"):
         self.cg = cg
         self.n_declared = 0
         self.n_feedbacks = 0
+        self._open: dict[str, Lease] = {}        # path -> live lease
+        self._oom: dict[str, list] = {}          # session -> [OomEvent]
 
     def declare(self, tool_id: str, hint: Optional[Hint] = None, *,
                 parent: str = "/", priority: int = D.NORMAL,
-                high: Optional[int] = None) -> Lease:
+                high: Optional[int] = None, max: int = UNLIMITED,
+                attempt: int = 1) -> Lease:
         if high is None:
             high = hint_to_high(hint)
         path = f"{parent.rstrip('/')}/{tool_id}"
-        self.cg.mkdir(path, DomainSpec(high=high, priority=priority))
+        self.cg.mkdir(path, DomainSpec(high=high, max=max, priority=priority))
         self.n_declared += 1
-        return Lease(self, tool_id, path, parent, hint, high)
+        lease = Lease(self, tool_id, path, parent, hint, high,
+                      priority=priority, max=max, attempt=attempt)
+        self._open[path] = lease
+        return lease
+
+    def open_leases(self, under: str = "/") -> list[Lease]:
+        return [ls for p, ls in self._open.items()
+                if path_in_scope(under, p)]
 
     def feedback(self, path: str, reason: str, *, peak: Optional[int] = None,
                  limit: Optional[int] = None) -> Feedback:
@@ -685,10 +776,64 @@ class IntentChannel:
             limit = self.cg.read(path, "memory.high")
             if limit >= UNLIMITED:
                 limit = self.cg.read(path, "memory.max")
-        fb = make_feedback(path, reason, peak or 0, limit or 0)
+        fb = make_feedback(path, reason,
+                           peak if peak is not None else 0,
+                           limit if limit is not None else 0)
         self.n_feedbacks += 1
         self.cg.log.emit(self.cg.now, Ev.FEEDBACK, path, reason=reason)
         return fb
+
+    # ------------------------------------------------- semantic OOM events
+
+    def _pre_kill(self, path: str) -> list[tuple]:
+        """Capture (lease, peak, limit, residual) for every open lease
+        under ``path`` BEFORE the backend kill zeroes usage."""
+        pre = []
+        for lease in self.open_leases(path):
+            if lease.killed or not self.cg.exists(lease.path):
+                continue
+            peak = self.cg.read(lease.path, "memory.peak")
+            limit = self.cg.read(lease.path, "memory.max")
+            if limit >= UNLIMITED:
+                limit = self.cg.read(lease.path, "memory.high")
+            pre.append((lease, peak, limit, self.cg.usage(lease.path)))
+        return pre
+
+    def _post_kill(self, pre: list[tuple]) -> None:
+        """Mark the leases killed and deliver typed OomEvents to their
+        owning sessions (the lease parent)."""
+        for lease, peak, limit, residual in pre:
+            ev = OomEvent(path=lease.path, session=lease.parent,
+                          peak_pages=int(peak), limit_pages=int(limit),
+                          attempt=lease.attempt,
+                          residual_pages=int(residual), t_ms=self.cg.now)
+            lease.killed = True
+            lease.oom = ev
+            self._oom.setdefault(lease.parent, []).append(ev)
+            self.cg.log.emit(self.cg.now, Ev.OOM, lease.path,
+                             session=lease.parent, peak=ev.peak_pages,
+                             limit=ev.limit_pages, attempt=ev.attempt,
+                             residual=ev.residual_pages)
+
+    def note_external_kill(self, path: str, freed: int = 0) -> None:
+        """Record a kill that bypassed the facade (fault injection, a
+        backend-side OOM): synthesize the same OomEvents an in-band
+        ``AgentCgroup.kill`` would have delivered.  Peak/limit are read
+        after the fact (both survive the kill on every backend); usage
+        is already zeroed, so the caller supplies ``freed`` as the
+        residual when a single lease was hit."""
+        pre = self._pre_kill(path)
+        if len(pre) == 1 and freed:
+            lease, peak, limit, _ = pre[0]
+            pre = [(lease, peak, limit, freed)]
+        self._post_kill(pre)
+
+    def oom_events(self, session: str, *, clear: bool = False) -> list:
+        """Typed OomEvents delivered to ``session`` (oldest first)."""
+        evs = self._oom.get(session, [])
+        if clear:
+            self._oom[session] = []
+        return list(evs)
 
 
 # -------------------------------------------------------------------- facade
@@ -798,7 +943,13 @@ class AgentCgroup:
         self.backend.thaw(path)
 
     def kill(self, path: str) -> int:
-        return self.backend.kill(path)
+        """memory.oom.group analogue.  Any open lease inside the killed
+        subtree additionally yields a typed ``OomEvent`` delivered to
+        its owning session (semantic OOM feedback, paper §5/§6)."""
+        pre = self.intent._pre_kill(path)
+        freed = self.backend.kill(path)
+        self.intent._post_kill(pre)
+        return freed
 
     # -------------------------------------------------------------- queries
 
@@ -830,6 +981,12 @@ class AgentCgroup:
         backend-agnostic lookup use ``snapshot()['index'][path]``.
         """
         return self.backend.snapshot()
+
+    def restore(self, snap: dict) -> None:
+        """Rebuild backend control state from a ``snapshot()`` dict —
+        crash recovery onto a freshly constructed backend of the same
+        kind (see ``HostTreeBackend.restore``)."""
+        self.backend.restore(snap)
 
     # ----------------------------------------------------------- device path
 

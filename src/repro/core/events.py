@@ -28,6 +28,8 @@ class Ev(enum.Enum):
     FEEDBACK = "feedback"           # downward intent channel fired
     ADMIT = "admit"
     DONE = "done"
+    OOM = "oom"                     # semantic OOM delivered to a session
+    REBUILD = "rebuild"             # backend rebuilt from snapshot
 
 
 @dataclass
@@ -36,6 +38,28 @@ class Event:
     kind: Ev
     domain: str
     detail: dict = field(default_factory=dict)
+
+
+@dataclass(frozen=True)
+class OomEvent:
+    """Typed semantic OOM: what the agent's wrapper would parse out of
+    an exit-137 + memcg ``memory.events`` read (the paper's §6
+    ``bash_wrapper.sh`` loop), delivered in-band to the owning session
+    so it can negotiate a retry instead of silently losing the call.
+    """
+    path: str                   # killed tool domain
+    session: str                # owning session domain (lease parent)
+    peak_pages: int             # memory.peak at kill time
+    limit_pages: int            # the limit that triggered the kill
+    attempt: int                # 1-based attempt number of the lease
+    residual_pages: int         # pages freed by the kill (work discarded)
+    t_ms: float = 0.0
+
+    def render(self) -> str:
+        return (f"[agentcgroup] OOM: {self.path} attempt {self.attempt} "
+                f"killed at peak {self.peak_pages} pages "
+                f"(limit {self.limit_pages}); {self.residual_pages} pages "
+                f"of work discarded")
 
 
 class EventLog:

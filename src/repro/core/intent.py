@@ -83,12 +83,23 @@ def make_feedback(tool_id: str, reason: str, peak: int, limit: int) -> Feedback:
     if reason == "oom":
         sug = ("Reduce the scope of this command (e.g. run a subset of the "
                "test suite, or split the workload) and retry.")
+    elif reason == "oom_kill":
+        sug = ("This call was killed by its memcg hard limit; it will be "
+               "retried at a negotiated higher limit if headroom allows.")
     elif reason == "throttled":
         sug = ("This call exceeded its declared memory hint; declare "
                "memory:high or reduce working-set size.")
     else:
         sug = "Session was frozen under memory pressure; it will resume."
     return Feedback(tool_id, reason, peak, limit, sug)
+
+
+def feedback_from_oom(ev) -> Feedback:
+    """Bridge a typed ``OomEvent`` (events.py) into the downward
+    feedback record the replayed agent model consumes — the semantic
+    half of the kill -> feedback -> retry loop."""
+    return make_feedback(ev.path.rsplit("/", 1)[-1], "oom_kill",
+                         ev.peak_pages, ev.limit_pages)
 
 
 @dataclass

@@ -226,7 +226,9 @@ class AgentCgroupPolicy(BasePolicy):
                  freeze_threshold: float = 0.97, thaw_threshold: float = 0.80,
                  hard_patience_ms: float = 150.0,
                  agent_model: Optional[AdaptiveAgentModel] = None,
-                 program: Optional[PolicyProgram] = None):
+                 program: Optional[PolicyProgram] = None,
+                 escalation=None,
+                 lease_max_factor: Optional[float] = None):
         # graduated-throttle constants live in the attached program
         # (domains.BASE_DELAY_MS etc. by default) — not duplicated here
         self.session_high = session_high or {}
@@ -236,6 +238,14 @@ class AgentCgroupPolicy(BasePolicy):
         self.hard_patience_ms = hard_patience_ms
         self.agent_model = agent_model or AdaptiveAgentModel()
         self.program = program
+        # semantic OOM escalation (core/escalation.py): when
+        # ``lease_max_factor`` is set, tool leases carry a hard
+        # ``memory.max`` = factor * high; a breach kills the lease and —
+        # with an ``EscalationPolicy`` — retries it at a negotiated
+        # higher limit instead of killing the task (both default off,
+        # preserving the established replay outputs bit-for-bit)
+        self.escalation = escalation
+        self.lease_max_factor = lease_max_factor
         self._lease: dict = {}          # task.key -> open tool Lease
         self._tool_seq = 0
 
@@ -261,16 +271,34 @@ class AgentCgroupPolicy(BasePolicy):
         if self.use_intent:
             declared = CATEGORY_HINT.get(call.category)
             hint = self.agent_model.hint_for(call.category, declared)
+        high = hint_to_high(hint)
+        lease_max = D.UNLIMITED
+        if self.lease_max_factor is not None:
+            lease_max = max(1, int(high * self.lease_max_factor))
         self._lease[task.key] = sim.cg.intent.declare(
             f"tool_{self._tool_seq}", hint, parent=self.domain_for(task),
-            priority=task.priority, high=hint_to_high(hint))
+            priority=task.priority, high=high, max=lease_max)
 
     def on_tool_end(self, sim, task, call) -> None:
         lease = self._lease.pop(task.key, None)
         if lease is not None:
+            if lease.attempt > 1 and not lease.killed:
+                # an escalated retry ran to completion — recovered
+                esc = getattr(sim, "_escalator", None)
+                if esc is not None:
+                    esc.ledger.record_recovery(f"{task.key}:{lease.tool_id}")
             # lease close logs memory.peak and moves retained memory up
             # to the session (retry accumulation)
             lease.close()
+
+    def open_lease(self, task):
+        return self._lease.get(task.key)
+
+    def replace_lease(self, task, lease) -> None:
+        if lease is None:
+            self._lease.pop(task.key, None)
+        else:
+            self._lease[task.key] = lease
 
     def charge_path(self, sim, task) -> str:
         lease = self._lease.get(task.key)
@@ -302,6 +330,20 @@ class AgentCgroupPolicy(BasePolicy):
                          and sim.cg.usage(sess)
                          <= sim.cg.read(sess, "memory.low"))
             return AllocOutcome(True, delay_ms=delay, protected=protected)
+        # memcg-max breach on the tool lease itself: kill the CALL (not
+        # the task) and — when escalation is on — retry it at a
+        # negotiated higher limit (the paper's exit-137 -> retry loop)
+        lease = self._lease.get(task.key)
+        if (lease is not None and ticket.blocked_by == lease.path
+                and lease.max < D.UNLIMITED
+                and sim.cg.usage(lease.path) + mb > lease.max):
+            if self.escalation is not None:
+                sim.escalate_tool_call(task)
+            else:
+                # no-retry baseline: a hard tool limit is fatal
+                sim.kill_task(task, reason="memcg_max_tool",
+                              allow_escalation=False)
+            return AllocOutcome(False, kill=True)
         # hard denial: stall; after patience, feedback-retry (strategy
         # reconstruction) instead of killing
         if sim.stall_ms(task) > self.hard_patience_ms:

@@ -509,10 +509,55 @@ class ShardedTableBackend:
                 "max": st["max"].reshape(-1),
                 "parent": parent,
                 "active": st["active"].reshape(-1),
+                "peak": st["peak"].reshape(-1),
+                "low": st["low"].reshape(-1),
+                "priority": st["priority"].reshape(-1),
+                "frozen": st["frozen"].reshape(-1),
                 "throttle_until": st["throttle_until"].reshape(-1),
                 "params": st["prog"].reshape(S * n, -1),
                 "root_usage": int(st["usage"][:, 0].sum()),
-                "root_handles": [s * n for s in range(S)]}
+                "root_handles": [s * n for s in range(S)],
+                "placement": dict(self._tenant_shard),
+                "next_shard": self._next_shard}
+
+    def restore(self, snap: dict) -> None:
+        """Rebuild placement, index, and the stacked device state from a
+        ``snapshot()`` dict — crash recovery onto a freshly constructed
+        backend with the same mesh shape and ``n_domains`` (see
+        ``HostTreeBackend.restore``).  Call after ``attach``."""
+        S, n = self.n_shards, self.per_shard_domains
+        assert len(snap["usage"]) == S * n, "snapshot/mesh shape mismatch"
+        self.index = {p: divmod(h, n) for p, h in snap["index"].items()}
+        self.index["/"] = (0, 0)
+        used = {s: {0} for s in range(S)}
+        for s, i in self.index.values():
+            used.setdefault(s, {0}).add(i)
+        self._free = [[i for i in range(1, n) if i not in used[s]]
+                      for s in range(S)]
+        for heap in self._free:
+            heapq.heapify(heap)
+        self._tenant_shard = dict(snap.get("placement", {}))
+        self._next_shard = int(snap.get("next_shard", 0))
+        base = (np.arange(S) * n)[:, None]
+        parent = np.asarray(snap["parent"]).reshape(S, n)
+        parent = np.where(parent >= 0, parent - base, -1)
+        sh = NamedSharding(self.mesh, P("shard"))
+        new = dict(self.state)
+        for key, src, dtype in (
+                ("usage", "usage", jnp.int32), ("peak", "peak", jnp.int32),
+                ("high", "high", jnp.int32), ("max", "max", jnp.int32),
+                ("low", "low", jnp.int32),
+                ("priority", "priority", jnp.int32),
+                ("frozen", "frozen", jnp.bool_),
+                ("active", "active", jnp.bool_),
+                ("throttle_until", "throttle_until", jnp.int32)):
+            if src in snap:
+                arr = np.asarray(snap[src]).reshape(S, n)
+                new[key] = jax.device_put(jnp.asarray(arr, dtype), sh)
+        new["parent"] = jax.device_put(jnp.asarray(parent, jnp.int32), sh)
+        params = np.asarray(snap["params"]).reshape(S, n, -1)
+        new["prog"] = jax.device_put(jnp.asarray(params, jnp.float32), sh)
+        self.state = new
 
     def set_time(self, t: float) -> None:
         self._now = t

@@ -41,6 +41,7 @@ from repro.core import domains as D
 from repro.core.cgroup import (AgentCgroup, DeviceTableBackend, DeviceView,
                                DomainSpec)
 from repro.core.controller import ControllerConfig
+from repro.core.daemon import AsyncDaemonBackend, DaemonError
 from repro.core.events import Ev, EventLog
 from repro.core.intent import Hint
 from repro.core.progs import PolicyProgram
@@ -120,6 +121,7 @@ class EngineMetrics:
     n_freezes: int = 0
     n_thaws: int = 0
     n_evictions: int = 0
+    n_rebuilds: int = 0                  # poisoned-daemon backend rebuilds
     steps: int = 0
 
 
@@ -133,23 +135,13 @@ class Engine:
         self.ecfg = ecfg
         self.caches = SlotCaches(cfg, ecfg.max_slots, ecfg.s_max)
         self.accountant = PageAccountant(ecfg.page_tokens)
-        n_domains = 4 * ecfg.max_slots + 8
-        inner_kind = (ecfg.async_inner if ecfg.backend == "async"
-                      else ecfg.backend)
-        if inner_kind == "sharded":
-            from repro.core.sharded import ShardedTableBackend
-            be = ShardedTableBackend(ecfg.pool_pages, n_domains=n_domains,
-                                     cfg=ecfg.ctrl, n_shards=ecfg.n_shards)
-        else:
-            be = DeviceTableBackend(ecfg.pool_pages, n_domains=n_domains,
-                                    cfg=ecfg.ctrl)
+        be = self._make_inner()
         if ecfg.backend == "async":
             # lifecycle off the hot path: mkdir/rmdir/write/freeze/thaw/
             # lease ops run on the daemon thread in FIFO epochs, applied
             # at the flush() in step() — the jitted enforcement path
             # closes over the INNER backend's device view and never
             # blocks on lifecycle work
-            from repro.core.daemon import AsyncDaemonBackend
             be = AsyncDaemonBackend(be)
         self.cg = AgentCgroup(be)
         # pool_pages is per device group: each shard root is capped at
@@ -169,6 +161,19 @@ class Engine:
         self._lease: dict[str, object] = {}      # sid -> open tool Lease
         self._tool_seq = 0
         self._prev_throttle = np.zeros(self.cg.backend.n_domains, np.int64)
+        self._attached_prog: Optional[PolicyProgram] = None
+        self._last_snapshot: Optional[dict] = None
+
+    def _make_inner(self):
+        e = self.ecfg
+        n_domains = 4 * e.max_slots + 8
+        inner_kind = e.async_inner if e.backend == "async" else e.backend
+        if inner_kind == "sharded":
+            from repro.core.sharded import ShardedTableBackend
+            return ShardedTableBackend(e.pool_pages, n_domains=n_domains,
+                                       cfg=e.ctrl, n_shards=e.n_shards)
+        return DeviceTableBackend(e.pool_pages, n_domains=n_domains,
+                                  cfg=e.ctrl)
 
     # ---------------------------------------------------- policy programs
 
@@ -176,6 +181,7 @@ class Engine:
         """Swap the in-step enforcement program (BPF object load): the
         next step re-traces against the new decision code.  For pure
         parameter retunes use ``update_params`` — no retrace."""
+        self._attached_prog = prog
         self.cg.attach("/", prog)
         self._view = self.cg.device_view()
         self._step = _make_step_fn(self.cfg, self.perf, self.ecfg,
@@ -297,6 +303,9 @@ class Engine:
     def _daemon(self) -> None:
         e = self.ecfg
         snap = self.cg.snapshot()
+        # last known-good step-boundary snapshot: the rebuild-from-
+        # snapshot path (poisoned async daemon) restores from here
+        self._last_snapshot = snap
         root_usage = int(snap.get("root_usage", snap["usage"][0]))
         self.metrics.root_usage.append(root_usage)
         self.metrics.overshoot_pages = max(
@@ -379,15 +388,93 @@ class Engine:
         self.metrics.n_evictions += 1
         self.log.emit(self.step_no, Ev.EVICT, s.domain)
 
+    # ------------------------------------------------- daemon-fault recovery
+
+    def _rebuild_backend(self) -> None:
+        """Survive a poisoned/wedged async daemon: drop the backend,
+        stand up a fresh one from the last step-boundary ``snapshot()``,
+        and reconcile anything newer than the snapshot from the engine's
+        Python-side session state (which is authoritative)."""
+        e = self.ecfg
+        try:
+            self.cg.backend.close(flush=False)
+        except Exception:                # noqa: BLE001 — already poisoned
+            pass
+        inner = self._make_inner()
+        if self._attached_prog is not None:
+            inner.attach("/", self._attached_prog)
+        if self._last_snapshot is not None:
+            inner.restore(self._last_snapshot)
+        be = inner
+        if e.backend == "async":
+            be = AsyncDaemonBackend(inner)
+        self.cg.backend = be
+        self.cg.set_time(self.step_no)
+        self._reconcile_sessions()
+        self._view = self.cg.device_view()
+        self._step = _make_step_fn(self.cfg, self.perf, self.ecfg,
+                                   self._view)
+        self._prev_throttle = np.asarray(
+            self._view.state["throttle_until"]).reshape(-1).astype(
+                np.int64).copy()
+        self.metrics.n_rebuilds += 1
+        self.log.emit(self.step_no, Ev.REBUILD, "/")
+
+    def _reconcile_sessions(self) -> None:
+        """The snapshot is up to one step-boundary stale: admissions,
+        freeze/thaw flips and charge drift since it was taken exist only
+        in the Session objects — re-apply them to the rebuilt tree."""
+        e = self.ecfg
+        for s in self.sessions.values():
+            if s.state in (SState.DONE, SState.EVICTED):
+                continue
+            tenant_path = f"/{s.tenant}"
+            if not self.cg.exists(tenant_path):
+                self.cg.mkdir(tenant_path)
+            if s.state is SState.WAITING:
+                continue
+            if not self.cg.exists(s.domain):
+                low = e.pool_pages if s.priority == D.HIGH else 0
+                high = (e.session_high or {}).get(s.sid, D.UNLIMITED)
+                self.cg.mkdir(s.domain, DomainSpec(
+                    priority=s.priority, low=low, high=high))
+            lease = self._lease.get(s.sid)
+            if lease is not None and not self.cg.exists(lease.path):
+                # the lease postdates the snapshot: drop it rather than
+                # resurrect it — the next burst step re-declares
+                self._lease.pop(s.sid)
+                self.cg.intent._open.pop(lease.path, None)
+                lease.closed = True
+                lease = None
+            path = lease.path if lease is not None else s.domain
+            s.dom_idx = self.cg.handle(path)
+            frozen = bool(self.cg.read(s.domain, "cgroup.freeze"))
+            if s.state is SState.FROZEN and not frozen:
+                self.cg.freeze(s.domain)
+            elif s.state is not SState.FROZEN and frozen:
+                self.cg.thaw(s.domain)
+            want = 0 if s.state is SState.FROZEN else s.pages
+            have = self.cg.usage(s.domain)
+            if want > have:
+                self.cg.charge_unchecked(path, want - have)
+            elif have > want:
+                self.cg.uncharge(path, have - want)
+
     # ----------------------------------------------------------------- step
 
     def step(self) -> None:
         e = self.ecfg
-        self.cg.set_time(self.step_no)
         # epoch boundary: queued lifecycle ops (async backend) apply
         # here, before the step reads the control state — never between
-        # the state read and the post-step commit
-        self.cg.flush()
+        # the state read and the post-step commit.  A wedged/poisoned
+        # daemon surfaces here as DaemonError; the engine rebuilds the
+        # whole backend from the last step-boundary snapshot and the
+        # step proceeds on the fresh control plane.
+        try:
+            self.cg.set_time(self.step_no)
+            self.cg.flush()
+        except DaemonError:
+            self._rebuild_backend()
         if self.ecfg.mode == "userspace":
             self._userspace_policy()
             self._apply_pending_gate()

@@ -53,13 +53,21 @@ from typing import Callable, Optional, Sequence
 from repro.core import domains as D
 from repro.core.cgroup import (AgentCgroup, DeviceTableBackend, DomainSpec,
                                HostTreeBackend)
+from repro.core.events import Ev
 from repro.core.intent import Hint
 from repro.core.progs import GraduatedThrottleProgram, TokenBucketProgram
 
 __all__ = ["Scenario", "ConformanceSuite", "ConformanceReport",
            "ScenarioResult", "OpRecorder", "replay", "get_scenario",
-           "standard_backend_factory", "backend_features", "BACKEND_KINDS",
-           "STANDARD_SCENARIOS"]
+           "standard_backend_factory", "faulty_backend_factory",
+           "backend_features", "BACKEND_KINDS", "STANDARD_SCENARIOS"]
+
+# Event kinds every backend emits identically (lifecycle + intent).
+# Breach/throttle counters (HIGH_BREACH/MAX_BREACH/THROTTLE) live
+# in-step on the device backends, so they only appear host-side and are
+# compared via the feature-gated full stream instead.
+PORTABLE_EVENT_KINDS = frozenset({Ev.CREATE, Ev.REMOVE, Ev.FREEZE, Ev.THAW,
+                                  Ev.OOM_KILL, Ev.OOM, Ev.FEEDBACK, Ev.DONE})
 
 
 # --------------------------------------------------------------- scenarios
@@ -139,6 +147,15 @@ def replay(cg: AgentCgroup, scenario: Scenario) -> list:
     cg.flush()                     # epoch boundary: async == sync from here
     for path in sorted(cg.paths()):
         obs.append((-1, "final", (path, cg.usage(path), cg.peak(path))))
+    # event-log audit (kind sequences, never timestamps): the portable
+    # lifecycle stream is compared on every backend; the full stream
+    # (breach/throttle counters) only where the backend surfaces it
+    events = list(cg.log.events)
+    obs.append((-2, "events_lifecycle",
+                tuple((e.kind.value, e.domain) for e in events
+                      if e.kind in PORTABLE_EVENT_KINDS)))
+    obs.append((-2, "events_all",
+                tuple((e.kind.value, e.domain) for e in events)))
     return obs
 
 
@@ -421,6 +438,33 @@ def standard_backend_factory(kind: str) -> Callable:
     return make
 
 
+def faulty_backend_factory(kind: str, plan=None, *, auto_retry: int = 0,
+                           on_spurious_kill: Optional[Callable] = None
+                           ) -> Callable:
+    """``FaultyBackend``-wrapped variant of a standard backend kind.
+    The wrapper sits directly around the synchronous inner backend, so
+    for ``async-*`` kinds injected faults fire on the daemon thread
+    (a wedge there poisons the daemon — the realistic failure mode).
+    With the default fault-free plan the factory must pass the
+    conformance suite bit-exact — certified in ``tests/test_faults.py``.
+    """
+
+    def make(capacity: int, n_domains: int):
+        from repro.core.faults import FaultyBackend
+        inner_kind = kind[len("async-"):] if kind.startswith("async-") \
+            else kind
+        faulty = FaultyBackend(
+            standard_backend_factory(inner_kind)(capacity, n_domains),
+            plan, auto_retry=auto_retry, on_spurious_kill=on_spurious_kill)
+        if kind.startswith("async-"):
+            from repro.core.daemon import AsyncDaemonBackend
+            return AsyncDaemonBackend(faulty)
+        return faulty
+
+    make.kind = f"faulty-{kind}"
+    return make
+
+
 def backend_features(kind: str) -> frozenset:
     """Feature flags a standard backend supports: the host tree (and the
     async daemon over it) surfaces full memcg event counters."""
@@ -507,6 +551,11 @@ class ConformanceSuite:
                 if close is not None:
                     close()                  # stop async daemon threads
             want = self._reference_obs(sc)
+            # the full event stream includes host-only breach/throttle
+            # kinds — only comparable when the backend surfaces them
+            if "events" not in features:
+                got = [r for r in got if r[1] != "events_all"]
+                want = [r for r in want if r[1] != "events_all"]
             mism = [f"op {gi}/{gn}: got {gv!r} want {wv!r}"
                     for (gi, gn, gv), (wi, wn, wv) in zip(got, want)
                     if (gi, gn, gv) != (wi, wn, wv)]

@@ -28,6 +28,7 @@ from typing import Optional
 from repro.core import domains as D
 from repro.core.accounting import Accounting
 from repro.core.cgroup import AgentCgroup, HostTreeBackend
+from repro.core.escalation import Escalator, EscalationExhausted, WasteLedger
 from repro.core.events import Ev, EventLog
 from repro.core.policy import AllocOutcome, BasePolicy
 from repro.traces.schema import AllocEvent, TaskTrace, ToolCall, to_alloc_events
@@ -103,6 +104,7 @@ class ReplayResult:
     latency: Accounting
     log: EventLog
     peak_pool_mb: int
+    escalation: Optional[dict] = None    # WasteLedger.summary() when active
 
     @property
     def survival(self) -> float:
@@ -155,7 +157,16 @@ class Replay:
                         ideal_ms=(ev[-1].t_ms if ev else 0.0))
             t.next_due_ms = ev[0].t_ms if ev else 0.0
             self.tasks.append(t)
+        # semantic OOM escalation: active only when the policy opts in
+        # (baselines have no ``escalation`` attribute — nothing changes)
+        esc_policy = getattr(policy, "escalation", None)
+        self._escalator = (Escalator(self.cg, esc_policy, WasteLedger())
+                           if esc_policy is not None else None)
         policy.setup(self, self.tasks)
+
+    @property
+    def waste_ledger(self) -> Optional[WasteLedger]:
+        return self._escalator.ledger if self._escalator else None
 
     # ------------------------------------------------- policy-facing API
 
@@ -171,9 +182,20 @@ class Replay:
             return task.spans[task.open_span][2]
         return None
 
-    def kill_task(self, task: SimTask, reason: str) -> None:
+    def kill_task(self, task: SimTask, reason: str, *,
+                  allow_escalation: bool = True) -> None:
+        """Kill the task's session domain.  With escalation active and
+        an open tool lease, the kill is absorbed at tool-call
+        granularity first: the lease is killed and retried at a
+        negotiated limit, and only exhaustion kills the session."""
         if not task.running:
             return
+        if (allow_escalation and self._escalator is not None
+                and getattr(self.policy, "open_lease",
+                            lambda t: None)(task) is not None):
+            if self.escalate_tool_call(task):
+                return                   # retry scheduled; task survives
+            return                       # exhausted: task already killed
         path = self.policy.domain_for(task)
         if self.cg.exists(path):
             self.cg.kill(path)
@@ -182,6 +204,40 @@ class Replay:
         task.finish_ms = self.now_ms
         task.stall_since_ms = None
         task.pending_mb = None
+
+    def escalate_tool_call(self, task: SimTask) -> bool:
+        """Kill the task's open tool lease (delivering the typed
+        ``OomEvent``) and retry the call at the negotiated limit:
+        rewind the event cursor to the span start, schedule the retry
+        after the jittered backoff.  Returns False when the attempt
+        budget is exhausted — the task is then killed for real."""
+        lease = self.policy.open_lease(task)
+        if self._escalator is None or lease is None:
+            self.kill_task(task, "memcg_max", allow_escalation=False)
+            return False
+        call_key = f"{task.key}:{lease.tool_id}"
+        freed = self.cg.kill(lease.path) if not lease.killed else 0
+        self._escalator.ledger.record_kill(
+            call_key, attempt_pages=freed, baseline_pages=task.usage_mb)
+        task.usage_mb = max(0, task.usage_mb - freed)
+        try:
+            new_lease, neg = self._escalator.escalate(lease)
+        except EscalationExhausted:
+            self.policy.replace_lease(task, None)
+            self.kill_task(task, "escalation_exhausted",
+                           allow_escalation=False)
+            return False
+        self.policy.replace_lease(task, new_lease)
+        # rewind to the span start: the retry replays the tool call's
+        # allocations under the new limit (the kill released them all)
+        if task.open_span >= 0:
+            s, _, _ = task.spans[task.open_span]
+            while task.idx > 0 and task.events[task.idx - 1].t_ms >= s:
+                task.idx -= 1
+        task.pending_mb = None
+        task.stall_since_ms = None
+        task.next_due_ms = self.now_ms + neg.backoff_ms
+        return True
 
     def frozen_tasks(self) -> list:
         return [t for t in self.tasks if t.running and t.frozen]
@@ -299,7 +355,9 @@ class Replay:
                     task.next_due_ms = self.now_ms + gap + delay
                 return True
             # not granted
-            if task.killed:
+            if task.killed or out.kill:
+                # killed outright, or the call was escalated: the event
+                # cursor/backoff were already reset — don't stall
                 return False
             task.pending_mb = mb
             if task.stall_since_ms is None:
@@ -360,7 +418,9 @@ class Replay:
             for t in self.tasks
         }
         return ReplayResult(self.policy.name, results, self.accounting,
-                            self.log, self.peak_pool)
+                            self.log, self.peak_pool,
+                            escalation=(self._escalator.ledger.summary()
+                                        if self._escalator else None))
 
 
 def replay(traces: list, priorities: list, policy: BasePolicy,

@@ -202,6 +202,51 @@ def test_wedged_daemon_fails_fast_not_hangs():
     assert not be._thread.is_alive()
 
 
+def test_wedged_daemon_recovery_from_snapshot():
+    """The rebuild contract: a backend rebuilt from the last good
+    ``snapshot()`` carries identical control state, and continued ops
+    on it bit-match an unpoisoned synchronous twin."""
+    spy = SpyInner(HostTreeBackend(500))
+    be = AsyncDaemonBackend(spy, flush_timeout_s=0.3)
+    cg = AgentCgroup(be)
+    twin = AgentCgroup(HostTreeBackend(500))
+    for c in (cg, twin):
+        c.mkdir("/t", DomainSpec(high=200))
+        c.mkdir("/t/s", DomainSpec(high=60, priority=D.HIGH))
+        c.try_charge("/t/s", 40, step=0)
+        c.write("/t/s", "memory.high", 80)
+    snap = cg.snapshot()                     # last known-good state
+    spy.gates["freeze"] = threading.Event()  # wedge the daemon
+    cg.freeze("/t/s")
+    with pytest.raises(DaemonError):
+        cg.flush()
+    with pytest.raises(DaemonError):
+        cg.mkdir("/t/x")                     # poisoned, loudly
+    # rebuild: fresh inner restored from the snapshot, re-wrapped
+    fresh = HostTreeBackend(500)
+    fresh.restore(snap)
+    be2 = AsyncDaemonBackend(fresh)
+    cg.backend = be2
+    snap2 = cg.snapshot()
+    for key in ("paths", "usage", "peak", "high", "max", "low",
+                "priority", "frozen", "killed"):
+        assert list(snap2[key]) == list(snap[key]), key
+    # continued ops on the rebuilt backend match the unpoisoned twin
+    for c in (cg, twin):
+        c.try_charge("/t/s", 30, step=1)
+        c.freeze("/t/s")
+        c.thaw("/t/s")
+        c.uncharge("/t/s", 20)
+        c.try_charge("/t/s", 100, step=2)    # over high: same decision
+    for path in ("/", "/t", "/t/s"):
+        for f in ("memory.current", "memory.peak", "memory.high",
+                  "cgroup.freeze"):
+            assert cg.read(path, f) == twin.read(path, f), (path, f)
+    spy.gates["freeze"].set()                # let the old daemon drain
+    be.close(flush=False)
+    be2.close()
+
+
 # -------------------------------------------------------------- eager mode
 
 

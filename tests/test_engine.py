@@ -150,6 +150,34 @@ def test_async_backend_bitexact_with_device(model):
     assert not asy.cg.backend._thread.is_alive()
 
 
+def test_engine_survives_poisoned_daemon(model):
+    """Robustness: when the async lifecycle daemon is poisoned mid-run
+    (wedge/timeout), the next step rebuilds the backend from the last
+    step-boundary snapshot and the run completes — same workload, full
+    survival, clean accounting."""
+    cfg, params = model
+    ecfg = EngineConfig(**COMMON, mode="inkernel", backend="async",
+                        use_freeze=True,
+                        session_high={"lo1": 12, "lo2": 12})
+    eng = Engine(cfg, params, perf=PERF, ecfg=ecfg, seed=0)
+    for s in sessions():
+        eng.submit(s)
+    for _ in range(40):
+        eng.step()
+    eng.cg.backend._wedged = True            # poison between steps
+    eng.run(6000)
+    r = eng.report()
+    assert eng.metrics.n_rebuilds == 1
+    assert r["survival"] == 1.0
+    assert r["overshoot_pages"] == 0
+    assert eng.cg.usage("/") == 0
+    for s in eng.sessions.values():
+        want = len(s.prompt) + sum(p.gen_tokens + p.append_tokens
+                                   for p in s.phases)
+        assert s.length == want, (s.sid, s.length, want)
+    eng.close()
+
+
 def test_sharded_backend_serves_multitenant(model):
     """Same workload on the ShardedTableBackend: in-step enforcement now
     runs per device group under shard_map, but the guarantees (survival,

@@ -1,0 +1,229 @@
+"""Semantic OOM escalation loop (core/escalation.py + the kill ->
+OomEvent delivery path in core/cgroup.py) and its replay integration:
+negotiation bounds, typed-event delivery, killed-lease close semantics,
+and the end-to-end retry-completion / waste-saved acceptance on the
+heavy-tailed spike corpus."""
+import pytest
+
+from repro.core import domains as D
+from repro.core.cgroup import AgentCgroup, DomainSpec, HostTreeBackend
+from repro.core.escalation import (EscalationExhausted, EscalationPolicy,
+                                   Escalator, WasteLedger)
+from repro.core.events import Ev, OomEvent
+from repro.core.intent import Hint, feedback_from_oom
+from repro.core.policy import AgentCgroupPolicy
+from repro.traces.generator import generate_spike_corpus
+from repro.traces.replay import ReplayConfig, replay
+
+
+def mk_cg(cap: int = 1000) -> AgentCgroup:
+    return AgentCgroup(HostTreeBackend(cap))
+
+
+def ev(peak=80, limit=100, attempt=1, path="/s/tool", session="/s"):
+    return OomEvent(path=path, session=session, peak_pages=peak,
+                    limit_pages=limit, attempt=attempt, residual_pages=peak)
+
+
+# ------------------------------------------------------------- negotiation
+
+
+def test_negotiate_grows_exponentially_from_limit():
+    pol = EscalationPolicy(growth=2.0, headroom=1.25)
+    neg = pol.negotiate(ev(peak=40, limit=100), parent_max=10_000)
+    assert neg.grant_pages == 200            # limit*growth dominates
+    assert neg.attempt == 2
+
+
+def test_negotiate_headroom_over_peak_skips_futile_attempts():
+    pol = EscalationPolicy(growth=2.0, headroom=1.25)
+    neg = pol.negotiate(ev(peak=400, limit=100), parent_max=10_000)
+    assert neg.grant_pages == 500            # peak*headroom dominates
+
+
+def test_negotiate_capped_by_parent_max():
+    pol = EscalationPolicy()
+    neg = pol.negotiate(ev(peak=80, limit=100), parent_max=150)
+    assert neg.grant_pages == 150
+
+
+def test_negotiate_exhausts_on_attempt_budget_and_ceiling():
+    pol = EscalationPolicy(max_attempts=3)
+    assert pol.negotiate(ev(attempt=3), parent_max=10_000) is None
+    # cap allows no growth past the limit that already killed it
+    assert pol.negotiate(ev(peak=80, limit=100), parent_max=100) is None
+
+
+def test_backoff_is_deterministic_jittered_exponential():
+    pol = EscalationPolicy(base_backoff_ms=20.0, backoff_factor=2.0,
+                           jitter_frac=0.25)
+    b1 = pol.backoff_ms("/s/tool", 1)
+    b2 = pol.backoff_ms("/s/tool", 2)
+    assert b1 == pol.backoff_ms("/s/tool", 1)        # same key: same jitter
+    assert 20.0 <= b1 <= 25.0
+    assert 40.0 <= b2 <= 50.0
+    assert pol.backoff_ms("/s/other", 1) != b1       # key-dependent
+
+
+# ------------------------------------------------ kill -> OomEvent delivery
+
+
+def test_kill_delivers_typed_oom_event_to_owning_session():
+    cg = mk_cg()
+    cg.mkdir("/s")
+    lease = cg.intent.declare("tool_1", Hint.LOW, parent="/s",
+                              high=50, max=50)
+    cg.try_charge(lease.path, 30)
+    freed = cg.kill(lease.path)
+    assert freed == 30
+    assert lease.killed and lease.oom is not None
+    got = cg.intent.oom_events("/s", clear=True)
+    assert len(got) == 1
+    e = got[0]
+    assert e.path == "/s/tool_1" and e.session == "/s"
+    assert e.limit_pages == 50 and e.residual_pages == 30
+    assert e.attempt == 1
+    assert cg.intent.oom_events("/s") == []          # cleared
+    assert cg.log.count(Ev.OOM) == 1
+
+
+def test_session_kill_delivers_events_for_all_open_leases():
+    cg = mk_cg()
+    cg.mkdir("/s")
+    a = cg.intent.declare("a", None, parent="/s", high=40)
+    b = cg.intent.declare("b", None, parent="/s", high=40)
+    cg.try_charge(a.path, 10)
+    cg.kill("/s")
+    assert a.killed and b.killed
+    assert len(cg.intent.oom_events("/s")) == 2
+
+
+def test_killed_lease_close_emits_no_done():
+    cg = mk_cg()
+    cg.mkdir("/s")
+    lease = cg.intent.declare("tool_1", None, parent="/s", high=50)
+    cg.try_charge(lease.path, 10)
+    cg.kill(lease.path)
+    n_done = cg.log.count(Ev.DONE)
+    assert lease.close() == 0                # kill already freed the pages
+    assert cg.log.count(Ev.DONE) == n_done   # no DONE after a kill
+    assert not cg.exists(lease.path)         # domain still reclaimed
+
+
+def test_oom_event_renders_and_feeds_back():
+    e = ev(peak=80, limit=100)
+    assert "oom" in e.render().lower() or "/s/tool" in e.render()
+    fb = feedback_from_oom(e)
+    assert fb.reason == "oom_kill"
+    assert fb.peak_pages == 80 and fb.limit_pages == 100
+
+
+def test_feedback_distinguishes_zero_from_unset():
+    cg = mk_cg()
+    cg.mkdir("/s", DomainSpec(high=40))
+    # explicit zero must survive (not be replaced by the domain's state)
+    fb = cg.intent.feedback("/s", "throttled", peak=0, limit=0)
+    assert fb.peak_pages == 0 and fb.limit_pages == 0
+    cg.try_charge("/s", 30)
+    fb2 = cg.intent.feedback("/s", "throttled")      # unset: read from tree
+    assert fb2.peak_pages == 30 and fb2.limit_pages == 40
+
+
+# ------------------------------------------------------------- escalator
+
+
+def test_escalator_redeclare_at_negotiated_limit():
+    cg = mk_cg()
+    cg.mkdir("/s", DomainSpec(max=400))
+    lease = cg.intent.declare("tool_1", Hint.LOW, parent="/s",
+                              high=50, max=50)
+    cg.try_charge(lease.path, 40)
+    cg.kill(lease.path)
+    esc = Escalator(cg, EscalationPolicy(growth=2.0))
+    new, neg = esc.escalate(lease)
+    assert lease.closed and not new.closed
+    assert new.path == lease.path and new.tool_id == "tool_1"
+    assert new.attempt == 2
+    assert neg.grant_pages == 100
+    assert cg.read(new.path, "memory.max") == 100
+    # the cap is the tightest ancestor memory.max (/s here)
+    cg.try_charge(new.path, 90)
+    cg.kill(new.path)
+    new2, neg2 = esc.escalate(new)
+    assert neg2.grant_pages == 200
+    cg.try_charge(new2.path, 190)
+    cg.kill(new2.path)
+    new3, neg3 = esc.escalate(new2)
+    assert neg3.grant_pages == 400           # capped by /s memory.max
+
+
+def test_escalator_exhaustion_is_loud_and_cleans_up():
+    cg = mk_cg()
+    cg.mkdir("/s")
+    lease = cg.intent.declare("tool_1", None, parent="/s", high=50, max=50)
+    cg.kill(lease.path)
+    esc = Escalator(cg, EscalationPolicy(max_attempts=1))
+    with pytest.raises(EscalationExhausted) as exc:
+        esc.escalate(lease)
+    assert exc.value.event is lease.oom
+    assert lease.closed and not cg.exists(lease.path)
+    assert esc.ledger.exhausted == 1
+
+
+def test_waste_ledger_accounting():
+    led = WasteLedger()
+    led.record_kill("a", attempt_pages=10, baseline_pages=300)
+    led.record_kill("a", attempt_pages=20, baseline_pages=999)  # 2nd attempt
+    led.record_recovery("a")
+    led.record_recovery("never_killed")      # ignored
+    assert led.killed_calls == 1 and led.kills == 2
+    assert led.recovered_calls == 1 and led.recovery_rate == 1.0
+    assert led.baseline_waste_pages == 300   # first kill only
+    assert led.attempt_waste_pages == 30
+    assert led.saved_pages == 270
+
+
+# --------------------------------------------------- replay integration
+
+
+def test_spike_corpus_hits_paper_peak_to_avg():
+    traces = generate_spike_corpus(4, seed=1)
+    ratios = [t.peak_mb / t.avg_mb for t in traces]
+    assert max(ratios) == pytest.approx(15.4, rel=0.01)
+    # deterministic: same seed, same corpus
+    again = generate_spike_corpus(4, seed=1)
+    assert [t.peak_mb for t in again] == [t.peak_mb for t in traces]
+
+
+def test_escalation_recovers_killed_tool_calls_on_spike_corpus():
+    """The acceptance bar: >= 90% of killed tool calls complete after
+    escalated retries, and the ledger shows waste saved vs. the
+    no-retry baseline."""
+    traces = generate_spike_corpus(4, seed=1)
+    prios = [D.NORMAL] * len(traces)
+    cfg = ReplayConfig(capacity_mb=24_000)
+    static = replay(traces, prios,
+                    AgentCgroupPolicy(lease_max_factor=1.0), cfg)
+    esc = replay(traces, prios,
+                 AgentCgroupPolicy(lease_max_factor=1.0,
+                                   escalation=EscalationPolicy()), cfg)
+    led = esc.escalation
+    assert led is not None and static.escalation is None
+    assert led["killed_calls"] > 0           # the corpus really spikes
+    assert led["recovery_rate"] >= 0.90
+    assert led["saved_pages"] > 0
+    assert esc.survival > static.survival
+    assert esc.survival == 1.0
+
+
+def test_escalation_off_by_default_keeps_baseline_semantics():
+    """Without opting in, AgentCgroupPolicy has unlimited lease maxes
+    and no escalator — the pre-existing replay path, bit-for-bit."""
+    pol = AgentCgroupPolicy()
+    assert pol.escalation is None and pol.lease_max_factor is None
+    traces = generate_spike_corpus(2, seed=3)
+    res = replay(traces, [D.NORMAL] * 2,
+                 AgentCgroupPolicy(), ReplayConfig(capacity_mb=24_000))
+    assert res.escalation is None
+    assert res.survival == 1.0
+    assert res.log.count(Ev.OOM) == 0

@@ -1,0 +1,242 @@
+"""Fault-injection harness (core/faults.py): conformance of the
+fault-free wrapper for every backend kind, deterministic replayable
+injection schedules, loud failure on wedges, and seeded chaos fuzz
+whose failing plans are dumped as replayable JSON artifacts."""
+import os
+
+import pytest
+
+from repro.core import domains as D
+from repro.core.cgroup import AgentCgroup, DomainSpec, HostTreeBackend
+from repro.core.daemon import AsyncDaemonBackend, DaemonError
+from repro.core.escalation import (EscalationExhausted, EscalationPolicy,
+                                   Escalator)
+from repro.core.faults import (FaultPlan, FaultyBackend,
+                               TransientBackendError)
+from repro.testing.conformance import (BACKEND_KINDS, ConformanceSuite,
+                                       backend_features,
+                                       faulty_backend_factory)
+
+SUITE = ConformanceSuite()
+
+
+# ------------------------------------------------------------- conformance
+
+
+@pytest.mark.parametrize("kind", BACKEND_KINDS)
+def test_fault_free_wrapper_is_conformant(kind):
+    """With the default (no-fault) plan, FaultyBackend around every
+    backend kind is bit-exact with the reference — the wrapper itself
+    perturbs nothing."""
+    report = SUITE.run(faulty_backend_factory(kind),
+                       features=backend_features(kind))
+    assert report.ok, report.summary()
+
+
+def test_transient_plan_with_auto_retry_is_conformant():
+    """A transient-only plan + auto_retry self-heals into the identical
+    run: transients fire BEFORE the inner op, so the retried op applies
+    exactly once."""
+    plan = FaultPlan(seed=7, p_transient=0.5)
+    report = SUITE.run(
+        faulty_backend_factory("host", plan=plan, auto_retry=1),
+        features=backend_features("host"))
+    assert report.ok, report.summary()
+
+
+# ------------------------------------------------------------ determinism
+
+
+def test_fault_plan_json_roundtrip():
+    plan = FaultPlan(seed=42, p_transient=0.25, p_delay=0.1, delay_s=0.002,
+                     p_spurious_kill=0.05, p_wedge=0.01, wedge_s=0.5,
+                     ops=("mkdir", "kill"))
+    assert FaultPlan.from_json(plan.to_json()) == plan
+    assert FaultPlan.from_json(FaultPlan().to_json()) == FaultPlan()
+
+
+def _scripted_run(plan: FaultPlan) -> list:
+    be = FaultyBackend(HostTreeBackend(500), plan)
+    cg = AgentCgroup(be)
+    for i in range(4):
+        try:
+            cg.mkdir(f"/s{i}", DomainSpec(high=60))
+        except TransientBackendError:
+            continue
+        for step, mb in ((0, 30), (1, 20), (2, 40)):
+            try:
+                cg.try_charge(f"/s{i}", mb, step=step)
+            except TransientBackendError:
+                pass
+    return list(be.injected)
+
+
+def test_injection_schedule_is_deterministic():
+    """Same plan + same op sequence -> identical injected faults: every
+    chaos failure replays from the plan alone."""
+    plan = FaultPlan(seed=3, p_transient=0.3, p_delay=0.2, delay_s=0.0001,
+                     p_spurious_kill=0.1)
+    a = _scripted_run(plan)
+    b = _scripted_run(plan)
+    assert a == b
+    assert a                                 # something actually fired
+    assert _scripted_run(FaultPlan(seed=4, p_transient=0.3, p_delay=0.2,
+                                   delay_s=0.0001,
+                                   p_spurious_kill=0.1)) != a
+
+
+def test_transient_raised_before_inner_op_applies():
+    plan = FaultPlan(seed=0, p_transient=1.0, ops=("try_charge",))
+    cg = AgentCgroup(FaultyBackend(HostTreeBackend(500), plan))
+    cg.mkdir("/s")                           # not in ops: untouched
+    with pytest.raises(TransientBackendError):
+        cg.try_charge("/s", 30)
+    assert cg.usage("/s") == 0               # the op did NOT apply
+
+
+# ---------------------------------------------------------- loud failure
+
+
+def test_wedge_inside_async_daemon_poisons_loudly():
+    """A wedged op on the daemon thread times the flush out: the caller
+    gets DaemonError (not a hang), and the backend stays poisoned until
+    closed and rebuilt — the engine's rebuild path recovers from this
+    exact state."""
+    plan = FaultPlan(seed=0, p_wedge=1.0, wedge_s=30.0, ops=("freeze",))
+    faulty = FaultyBackend(HostTreeBackend(500), plan)
+    be = AsyncDaemonBackend(faulty, flush_timeout_s=0.3)
+    cg = AgentCgroup(be)
+    cg.mkdir("/s")
+    cg.freeze("/s")                          # queues; daemon wedges on apply
+    with pytest.raises(DaemonError, match="timed out"):
+        cg.flush()
+    with pytest.raises(DaemonError, match="close and rebuild"):
+        cg.mkdir("/t")                       # poisoned: loud, never silent
+    faulty.unwedge()
+    be.close(flush=False)
+
+
+def test_spurious_kill_routes_into_escalation_and_recovers():
+    """An injected out-of-band kill (kernel OOM analogue) lands on the
+    open lease; note_external_kill synthesizes the typed OomEvent and
+    the escalation loop retries the call at a negotiated limit."""
+    holder = {}
+    plan = FaultPlan(seed=0, p_spurious_kill=1.0, ops=("uncharge",))
+    be = FaultyBackend(
+        HostTreeBackend(1000), plan,
+        on_spurious_kill=lambda p, f:
+            holder["cg"].intent.note_external_kill(p, freed=f))
+    cg = AgentCgroup(be)
+    holder["cg"] = cg
+    cg.mkdir("/s")
+    cg.try_charge("/s", 10)
+    lease = cg.intent.declare("tool_1", None, parent="/s", high=50, max=50)
+    cg.try_charge(lease.path, 30)
+    cg.uncharge("/s", 5)                     # injection point: kills the lease
+    assert lease.killed and lease.oom is not None
+    assert lease.oom.residual_pages == 30    # freed routed via the callback
+    new, neg = Escalator(cg, EscalationPolicy()).escalate(lease)
+    assert new.attempt == 2 and neg.grant_pages == 100
+    assert cg.read(new.path, "memory.max") == 100
+    new.close()
+
+
+# -------------------------------------------------------------- chaos fuzz
+
+
+def _chaos_plan(seed: int) -> FaultPlan:
+    return FaultPlan(seed=seed, p_transient=0.15, p_delay=0.05,
+                     delay_s=0.0002, p_spurious_kill=0.08)
+
+
+def _chaos_run(plan: FaultPlan) -> int:
+    """A lease-heavy workload under the plan's faults.  Transients
+    self-heal (auto_retry), spurious kills route into escalation; the
+    run must end with clean accounting or have failed loudly."""
+    holder = {}
+    be = FaultyBackend(
+        HostTreeBackend(1000), plan, auto_retry=1,
+        on_spurious_kill=lambda p, f:
+            holder["cg"].intent.note_external_kill(p, freed=f))
+    cg = AgentCgroup(be)
+    holder["cg"] = cg
+    esc = Escalator(cg, EscalationPolicy(max_attempts=3))
+    cg.mkdir("/s", DomainSpec(max=600))
+    clock = 0.0
+    completed = 0
+    for i in range(6):
+        lease = cg.intent.declare(f"tool_{i}", None, parent="/s",
+                                  high=40, max=40)
+        need = 30 + 15 * (i % 3)             # some calls exceed the max
+        charged = 0
+        for _ in range(30):
+            if charged >= need or lease.closed:
+                break
+            if lease.killed:
+                try:
+                    lease, _ = esc.escalate(lease)
+                except EscalationExhausted:
+                    break
+                charged = 0
+                continue
+            clock += 500.0                   # expire throttle windows
+            cg.set_time(clock)
+            if cg.usage(lease.path) + 10 > lease.max:
+                cg.kill(lease.path)          # memcg-max breach -> semantic OOM
+                continue
+            if cg.try_charge(lease.path, 10).granted:
+                charged += 10
+        if not lease.closed:
+            if charged >= need and not lease.killed:
+                completed += 1
+            lease.close()
+    # invariants: every lease resolved, accounting sane and bounded
+    assert cg.intent.open_leases() == []
+    assert 0 <= cg.usage("/") <= 1000
+    assert cg.usage("/s") == cg.usage("/")
+    return completed
+
+
+CHAOS_SEEDS = list(range(8))
+
+
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_chaos_fuzz_invariants_hold(seed):
+    """Seeded chaos sweep.  A failing seed dumps its FaultPlan JSON to
+    ``$CHAOS_ARTIFACT_DIR`` (or cwd) — replay the failure with exactly
+    that plan via ``FaultPlan.from_json``."""
+    plan = _chaos_plan(seed)
+    try:
+        _chaos_run(plan)
+    except BaseException:
+        art = os.environ.get("CHAOS_ARTIFACT_DIR", ".")
+        os.makedirs(art, exist_ok=True)
+        with open(os.path.join(art, f"chaos-faultplan-{seed}.json"),
+                  "w") as f:
+            f.write(plan.to_json())
+        raise
+
+
+def test_chaos_fuzz_hypothesis():
+    """Property-based sweep over plan space (skips when hypothesis is
+    not installed; the seeded sweep above always runs)."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=25, deadline=None)
+    @hyp.given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+               p_tr=st.floats(0.0, 0.4), p_ki=st.floats(0.0, 0.2))
+    def prop(seed, p_tr, p_ki):
+        plan = FaultPlan(seed=seed, p_transient=p_tr, p_delay=0.02,
+                         delay_s=0.0001, p_spurious_kill=p_ki)
+        try:
+            _chaos_run(plan)
+        except BaseException:
+            art = os.environ.get("CHAOS_ARTIFACT_DIR", ".")
+            os.makedirs(art, exist_ok=True)
+            with open(os.path.join(art, f"chaos-faultplan-{seed}.json"),
+                      "w") as f:
+                f.write(plan.to_json())
+            raise
+
+    prop()
