@@ -14,7 +14,8 @@ from repro.core import domains as D
 from repro.core.policy import (AgentCgroupPolicy, NoIsolationPolicy,
                                PredictiveP95Policy, ReactivePSIPolicy,
                                StaticLimitPolicy)
-from repro.traces.generator import generate_task, named_trace
+from repro.traces.generator import (generate_spike_corpus, generate_task,
+                                    named_trace)
 from repro.traces.replay import ReplayConfig, replay
 
 
@@ -71,9 +72,30 @@ def run():
     print(f"adaptability: P95-history limits survival {r_pred.survival:.2f} "
           f"under run-to-run variance; AgentCgroup (no prediction) "
           f"{r_acg.survival:.2f}")
+
+    # ---- burst-shape profiles: ONE policy across model trace classes.
+    # The mismatches are workload properties, not policy bugs: the same
+    # AgentCgroup policy must hold across burst-shape/baseline profiles
+    # (Haiku's tall test bursts, GLM's bash-heavy steadiness, and the
+    # in-between qwen class) without per-model tuning.
+    by_model = {}
+    # spike targets matched to each class's burst shape (the 15.4x
+    # exemplar was a Haiku task; GLM's bash-heavy traces spike flatter)
+    for model, ratio in (("haiku", 15.4), ("glm", 7.0), ("qwen", 10.0)):
+        corpus = generate_spike_corpus(4, seed=9, model=model,
+                                       duration_s=120.0,
+                                       peak_to_avg=ratio)
+        r = replay(corpus, [D.NORMAL] * len(corpus), AgentCgroupPolicy(),
+                   ReplayConfig(capacity_mb=1500))
+        by_model[model] = (r.survival, r.throttle_count, r.peak_pool_mb)
+        print(f"profiles    : {model:<6} survival {r.survival:.2f}, "
+              f"throttles {r.throttle_count}, "
+              f"peak pool {r.peak_pool_mb} MB (untuned policy)")
+
     return {"granularity": (r_avg.survival, r_peak.survival, waste),
             "responsiveness": (r_psi.survival, r_agent.survival),
-            "adaptability": (r_pred.survival, r_acg.survival)}
+            "adaptability": (r_pred.survival, r_acg.survival),
+            "profiles": by_model}
 
 
 if __name__ == "__main__":

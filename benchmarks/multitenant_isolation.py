@@ -18,9 +18,18 @@ Reported per tenant: grant rate, denial count, longest stall streak,
 and peak pages; the interference headline is the victims' denial rate
 delta between the two configurations.
 
+A second scenario exercises the CPU half (``cpu.weight``): four
+tenants with weights 400/200/100/100 compete for two decode slots per
+step under ``WeightedFairProgram``, against a uniform-weight baseline.
+Grant shares must track the flattened weight ratios within 5%, and the
+high-weight tenant's P99 gap between consecutive grants must be lower
+than under the uniform gate — weight buys latency, not just share.
+
 Run on a CPU host with fake devices (set by default):
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python benchmarks/multitenant_isolation.py
+``--quick`` runs only the fairness scenario with its tolerance
+assertion (the CI bench-smoke entry).
 """
 import argparse
 import os
@@ -118,12 +127,103 @@ def run_config(kind: str, n_tenants: int, steps: int, pool: int) -> dict:
     return out
 
 
+def run_fairness(weights=(400, 200, 100, 100), steps: int = 2000,
+                 budget: int = 2, tol: float = 0.05) -> dict:
+    """Weighted decode-slot fairness: the same always-runnable slot mix
+    under ``WeightedFairProgram``, weighted vs uniform-weight baseline.
+
+    Asserts (a) grant shares within ``tol`` relative of the flattened
+    weight ratios and (b) the top-weight tenant's P99 grant gap strictly
+    below its uniform-baseline gap.
+    """
+    import functools
+
+    from repro.core.sched import WeightedFairProgram
+
+    n = len(weights)
+    results = {}
+    for label, ws in (("weighted", tuple(weights)),
+                      ("uniform", (100,) * n)):
+        be = DeviceTableBackend(10 ** 6, n_domains=n + 4, cfg=CTRL,
+                                prog=WeightedFairProgram(
+                                    base_delay_ms=0.0, max_delay_ms=0.0))
+        cg = AgentCgroup(be)
+        handles = [cg.mkdir(f"/t{t}", DomainSpec(weight=w))
+                   for t, w in enumerate(ws)]
+        view = cg.device_view()
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def step_fn(state, dom, cost, step_no):
+            return view.schedule(state, dom, cost, step_no, budget)
+
+        dom = jnp.asarray(handles, jnp.int32)
+        cost = jnp.ones((n,), jnp.int32)
+        grants = np.zeros((steps, n), bool)
+        state = view.state
+        t0 = time.time()
+        for s in range(steps):
+            state, adv = step_fn(state, dom, cost, s)
+            grants[s] = np.asarray(adv)
+        jax.block_until_ready(state["vruntime"])
+        dt = time.time() - t0
+        view.commit(state)
+
+        share = grants.sum(axis=0) / max(int(grants.sum()), 1)
+        p99 = []
+        for t in range(n):
+            gap = np.diff(np.flatnonzero(grants[:, t]))
+            p99.append(float(np.percentile(gap, 99)) if gap.size
+                       else float("inf"))
+        results[label] = {"share": share.tolist(), "p99_gap": p99,
+                          "steps_per_s": steps / dt}
+
+    expect = [w / sum(weights) for w in weights]
+    got = results["weighted"]["share"]
+    for t, (e, g) in enumerate(zip(expect, got)):
+        assert abs(g - e) <= tol * e, (
+            f"tenant /t{t}: share {g:.3f} vs weight ratio {e:.3f} "
+            f"(>{100 * tol:.0f}% off)")
+    hi = int(np.argmax(weights))
+    assert (results["weighted"]["p99_gap"][hi]
+            < results["uniform"]["p99_gap"][hi]), (
+        "high-weight tenant's P99 grant gap did not improve over the "
+        "uniform baseline")
+
+    print(f"\n== weighted decode-slot fairness: {n} tenants, weights "
+          f"{list(weights)}, {budget} slots/step, {steps} steps ==")
+    print(f"{'tenant':8s} {'weight':>6s} {'share':>7s} {'expect':>7s} "
+          f"{'p99gap':>7s} {'uniform':>8s}")
+    for t in range(n):
+        print(f"/t{t:<6d} {weights[t]:6d} {got[t]:7.3f} {expect[t]:7.3f} "
+              f"{results['weighted']['p99_gap'][t]:7.0f} "
+              f"{results['uniform']['p99_gap'][t]:8.0f}")
+    print(f"shares within {100 * tol:.0f}% of weight ratios; high-weight "
+          f"p99 gap {results['weighted']['p99_gap'][hi]:.0f} vs uniform "
+          f"{results['uniform']['p99_gap'][hi]:.0f} steps "
+          f"({results['weighted']['steps_per_s']:.0f} sched-steps/s)")
+    return results
+
+
+def run() -> dict:
+    """Suite entry point (benchmarks.run): the weighted-fairness
+    scenario; the 8-device isolation comparison stays CLI-only."""
+    return run_fairness(steps=1200)
+
+
 def main() -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tenants", type=int, default=8)
     ap.add_argument("--steps", type=int, default=400)
     ap.add_argument("--pool", type=int, default=256)
+    ap.add_argument("--quick", action="store_true",
+                    help="fairness scenario + tolerance assertion only "
+                         "(CI bench-smoke)")
     args = ap.parse_args()
+
+    if args.quick:
+        run_fairness(steps=400)
+        print("quick fairness check: PASS")
+        return {}
 
     print(f"\n== multi-tenant burst isolation: {args.tenants} tenants, "
           f"{args.steps} steps, {args.pool}-page aggregate pool, "
@@ -145,6 +245,7 @@ def main() -> dict:
     print(f"\nvictim denial rate: shared={shared:.3f}  sharded={shard:.3f}"
           f"  (interference removed: "
           f"{100 * (shared - shard) / max(shared, 1e-9):.0f}%)")
+    results["fairness"] = run_fairness()
     return results
 
 

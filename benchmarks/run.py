@@ -5,6 +5,7 @@
   fig8_replay        §6 Fig 8 (trace replay: survival + P95 latency)
   escalation_waste   §6 semantic OOM escalation (retry completion + waste)
   engine_fig8        beyond-paper: Fig 8 on the live serving engine
+  multitenant_isolation  cpu.weight proportional share vs uniform gate
   throttle_precision §6 kernel-selftest analogue (2000 ms +/- 2.3%)
   roofline_table     dry-run roofline baselines (if results/ present)
 
@@ -19,13 +20,15 @@ def main() -> None:
     t0 = time.time()
     from benchmarks import (characterization, engine_fig8,
                             engine_overhead, escalation_waste, fig8_replay,
-                            mismatch, throttle_precision)
+                            mismatch, multitenant_isolation,
+                            throttle_precision)
     characterization.run()
     mismatch.run()
     fig8_replay.run()
     escalation_waste.run(n=4)
     engine_fig8.run()
     engine_overhead.run()
+    multitenant_isolation.run()
     throttle_precision.run()
     if os.path.isdir("results/dryrun"):
         from benchmarks import roofline_table

@@ -65,9 +65,9 @@ UNLIMITED = D.UNLIMITED
 # readable / writable control files (the cgroupfs surface)
 _READ_FILES = ("memory.current", "memory.peak", "memory.high", "memory.max",
                "memory.low", "memory.priority", "memory.events",
-               "cgroup.freeze")
+               "cgroup.freeze", "cpu.weight", "cpu.max")
 _WRITE_FILES = ("memory.high", "memory.max", "memory.low", "memory.priority",
-                "cgroup.freeze")
+                "cgroup.freeze", "cpu.weight", "cpu.max")
 
 
 @dataclass(frozen=True)
@@ -77,6 +77,8 @@ class DomainSpec:
     max: int = UNLIMITED
     low: int = 0
     priority: int = D.NORMAL
+    weight: int = D.DEFAULT_WEIGHT     # cpu.weight (1..10000)
+    cpu_max: int = UNLIMITED           # cpu.max: step quota per window
 
 
 @dataclass(frozen=True)
@@ -131,6 +133,8 @@ class Backend(Protocol):
                    step: Optional[int]) -> ChargeTicket: ...
     def uncharge(self, path: str, pages: int) -> None: ...
     def charge_unchecked(self, path: str, pages: int) -> None: ...
+    def schedule(self, paths: list, costs: list, step: int,
+                 budget: int) -> list: ...
     def freeze(self, path: str) -> None: ...
     def thaw(self, path: str) -> None: ...
     def kill(self, path: str) -> int: ...
@@ -170,6 +174,7 @@ class HostTreeBackend:
         self.attach_scope = "/"
         self._rows: dict[str, np.ndarray] = {"/": self.prog.default_row()}
         self._decide = None              # jitted charge_decision, per program
+        self.tree.root.flat_weight = 1.0
 
     # -------------------------------------------------------------- programs
 
@@ -199,10 +204,20 @@ class HostTreeBackend:
                 lambda view, req: charge_decision(prog, view, req))
         return self._decide
 
+    def _recompute_flat(self) -> None:
+        """Re-flatten hierarchical weights (lifecycle rate: mkdir /
+        rmdir / cpu.weight writes), scx_flatcg style."""
+        from repro.core.sched import flat_weights_by_path
+        flat = flat_weights_by_path(
+            {p: d.weight for p, d in self.tree._index.items()})
+        for p, d in self.tree._index.items():
+            d.flat_weight = float(flat[p])
+
     # lifecycle
     def mkdir(self, path: str, spec: DomainSpec) -> int:
         self.tree.create(path, high=spec.high, max=spec.max, low=spec.low,
-                         priority=spec.priority)
+                         priority=spec.priority, weight=spec.weight,
+                         cpu_max=spec.cpu_max)
         h = self._next_id
         self._next_id += 1
         self._ids[path] = h
@@ -215,6 +230,7 @@ class HostTreeBackend:
         else:
             row = self.prog.default_row()
         self._rows[path] = row
+        self._recompute_flat()
         return h
 
     def rmdir(self, path: str, transfer_residual: bool) -> int:
@@ -225,6 +241,7 @@ class HostTreeBackend:
             self.charge_unchecked(parent, residual)
         self._paths.pop(self._ids.pop(path), None)
         self._rows.pop(path, None)
+        self._recompute_flat()
         return residual
 
     def exists(self, path: str) -> bool:
@@ -311,6 +328,57 @@ class HostTreeBackend:
             a.usage = max(0, a.usage + pages)
             a.peak = max(a.peak, a.usage)
 
+    # scheduling (the sched_ext half)
+    def schedule(self, paths: list, costs: list, step: int,
+                 budget: int) -> list:
+        """One weighted scheduling round over the given slots — the
+        literal same jitted ``schedule_decision`` the device kernels
+        trace, run on a state view assembled from the tree."""
+        import jax.numpy as jnp
+
+        from repro.core.sched import jit_schedule
+        order = list(self.tree._index)
+        row = {p: i for i, p in enumerate(order)}
+        doms = [self.tree.get(p) for p in order]
+        state = {
+            "usage": jnp.asarray([d.usage for d in doms], jnp.int32),
+            "high": jnp.asarray([d.high for d in doms], jnp.int32),
+            "max": jnp.asarray([d.max for d in doms], jnp.int32),
+            "low": jnp.asarray([d.low for d in doms], jnp.int32),
+            "parent": jnp.asarray(
+                [row.get(parent_path(p), -1) if p != "/" else -1
+                 for p in order], jnp.int32),
+            "priority": jnp.asarray([d.priority for d in doms], jnp.int32),
+            "frozen": jnp.asarray([d.frozen or d.killed for d in doms],
+                                  bool),
+            "active": jnp.ones((len(order),), bool),
+            "throttle_until": jnp.asarray(
+                [d.throttle_until for d in doms], jnp.float32),
+            "prog": jnp.asarray(np.stack([self._rows[p] for p in order]),
+                                jnp.float32),
+            "weight": jnp.asarray([d.weight for d in doms], jnp.int32),
+            "cpu_max": jnp.asarray([d.cpu_max for d in doms], jnp.int32),
+            "flat_weight": jnp.asarray([d.flat_weight for d in doms],
+                                       jnp.float32),
+            "vruntime": jnp.asarray([d.vruntime for d in doms],
+                                    jnp.float32),
+            "cpu_used": jnp.asarray([d.cpu_used for d in doms], jnp.int32),
+            "cpu_stamp": jnp.asarray([d.cpu_stamp for d in doms],
+                                     jnp.int32),
+        }
+        dom = jnp.asarray([row[p] for p in paths], jnp.int32)
+        cost = jnp.asarray(list(costs), jnp.int32)
+        st, advance = jit_schedule(self.prog, state, dom, cost,
+                                   int(step), int(budget))
+        vr = np.asarray(st["vruntime"])
+        used = np.asarray(st["cpu_used"])
+        stamp = np.asarray(st["cpu_stamp"])
+        for i, d in enumerate(doms):
+            d.vruntime = float(vr[i])
+            d.cpu_used = int(used[i])
+            d.cpu_stamp = int(stamp[i])
+        return [bool(a) for a in np.asarray(advance)]
+
     # subtree control
     def freeze(self, path: str) -> None:
         self.tree.freeze(path)
@@ -338,6 +406,10 @@ class HostTreeBackend:
             return d.priority
         if file == "cgroup.freeze":
             return int(d.frozen)
+        if file == "cpu.weight":
+            return d.weight
+        if file == "cpu.max":
+            return d.cpu_max
         if file == "memory.events":
             return {"high": d.n_high_breach, "max": d.n_max_breach,
                     "throttle": d.n_throttle, "oom_kill": d.n_oom_kill}
@@ -355,6 +427,12 @@ class HostTreeBackend:
             d.priority = int(value)
         elif file == "cgroup.freeze":
             (self.freeze if int(value) else self.thaw)(path)
+        elif file == "cpu.weight":
+            from repro.core.sched import check_weight
+            d.weight = check_weight(value)
+            self._recompute_flat()
+        elif file == "cpu.max":
+            d.cpu_max = int(value)
         else:
             raise KeyError(file)
 
@@ -383,6 +461,15 @@ class HostTreeBackend:
                 "killed": np.array([idx[p].killed for p in order], bool),
                 "throttle_until": np.array([idx[p].throttle_until
                                             for p in order]),
+                "weight": np.array([idx[p].weight for p in order], np.int64),
+                "cpu_max": np.array([idx[p].cpu_max for p in order],
+                                    np.int64),
+                "vruntime": np.array([idx[p].vruntime for p in order],
+                                     np.float32),
+                "cpu_used": np.array([idx[p].cpu_used for p in order],
+                                     np.int64),
+                "cpu_stamp": np.array([idx[p].cpu_stamp for p in order],
+                                      np.int64),
                 "root_usage": self.tree.root.usage}
 
     def restore(self, snap: dict) -> None:
@@ -410,7 +497,14 @@ class HostTreeBackend:
                 d.peak = int(snap["peak"][i])
                 d.low = int(snap["low"][i])
                 d.priority = int(snap["priority"][i])
+            if "weight" in snap:
+                d.weight = int(snap["weight"][i])
+                d.cpu_max = int(snap["cpu_max"][i])
+                d.vruntime = float(snap["vruntime"][i])
+                d.cpu_used = int(snap["cpu_used"][i])
+                d.cpu_stamp = int(snap["cpu_stamp"][i])
             self._rows[p] = np.asarray(snap["params"][i]).copy()
+        self._recompute_flat()
 
     def set_time(self, t: float) -> None:
         self.tree.now_ms = t
@@ -460,6 +554,13 @@ class DeviceView:
         from repro.core import controller as C
         return C.slot_gate(state, dom, step, self.prog)
 
+    def schedule(self, state, dom, cost, step, budget):
+        """Weighted per-slot scheduling round: (state, advance) —
+        the gate plus cpu.weight fair share and cpu.max throttling."""
+        from repro.core import sched as S
+        return S.schedule_decision(self.prog, state, dom, cost, step,
+                                   budget)
+
     def commit(self, state: dict) -> None:
         """Adopt the (possibly donated) post-step state."""
         self._backend.table.state = state
@@ -500,11 +601,29 @@ class DeviceTableBackend:
     def device_view(self) -> DeviceView:
         return DeviceView(self)
 
+    def _recompute_flat(self) -> None:
+        """Re-flatten hierarchical weights into the device row
+        (lifecycle rate — one host sync, like the other lifecycle ops),
+        scx_flatcg style."""
+        import jax.numpy as jnp
+
+        from repro.core.sched import flat_weights_by_path
+        st = self.table.state
+        w = np.asarray(st["weight"])
+        flat = flat_weights_by_path(
+            {p: int(w[i]) for p, i in self.table.index.items()})
+        arr = np.zeros((self.table.n,), np.float32)
+        for p, i in self.table.index.items():
+            arr[i] = flat[p]
+        self.table.state = dict(st, flat_weight=jnp.asarray(arr))
+
     # lifecycle
     def mkdir(self, path: str, spec: DomainSpec) -> int:
         assert len(ancestor_paths(path)) <= 4, f"{path}: deeper than DEPTH"
         idx = self.table.create(path, high=spec.high, max=spec.max,
-                                low=spec.low, priority=spec.priority)
+                                low=spec.low, priority=spec.priority,
+                                weight=spec.weight, cpu_max=spec.cpu_max)
+        self._recompute_flat()
         self.log.emit(self._now, Ev.CREATE, path, high=spec.high,
                       max=spec.max)
         return idx
@@ -515,6 +634,7 @@ class DeviceTableBackend:
         self.table.remove(path)          # uncharges residual from the chain
         if transfer_residual and residual and parent is not None:
             self.charge_unchecked(parent, residual)
+        self._recompute_flat()
         self.log.emit(self._now, Ev.REMOVE, path)
         return residual
 
@@ -564,6 +684,20 @@ class DeviceTableBackend:
         self.table.state = C.host_charge(self.table.state,
                                          self.table.index[path], pages)
 
+    # scheduling (host-driven path; the engine schedules in-step via
+    # device_view().schedule)
+    def schedule(self, paths: list, costs: list, step: int,
+                 budget: int) -> list:
+        import jax.numpy as jnp
+
+        from repro.core.sched import jit_schedule
+        dom = jnp.asarray([self.table.index[p] for p in paths], jnp.int32)
+        cost = jnp.asarray(list(costs), jnp.int32)
+        st, advance = jit_schedule(self.table.prog, self.table.state,
+                                   dom, cost, int(step), int(budget))
+        self.table.state = st
+        return [bool(a) for a in np.asarray(advance)]
+
     # subtree control
     def _subtree(self, path: str) -> list[str]:
         return [p for p in self.table.index if path_in_scope(path, p)]
@@ -602,7 +736,8 @@ class DeviceTableBackend:
     _FILE_KEY = {"memory.current": "usage", "memory.peak": "peak",
                  "memory.high": "high", "memory.max": "max",
                  "memory.low": "low", "memory.priority": "priority",
-                 "cgroup.freeze": "frozen"}
+                 "cgroup.freeze": "frozen", "cpu.weight": "weight",
+                 "cpu.max": "cpu_max"}
 
     def read(self, path: str, file: str):
         if file == "memory.events":
@@ -620,11 +755,16 @@ class DeviceTableBackend:
         if file == "cgroup.freeze":
             (self.freeze if int(value) else self.thaw)(path)
             return
+        if file == "cpu.weight":
+            from repro.core.sched import check_weight
+            value = check_weight(value)
         idx = self.table.index[path]
         key = self._FILE_KEY[file]
         st = self.table.state
         self.table.state = dict(
             st, **{key: st[key].at[idx].set(int(value))})
+        if file == "cpu.weight":
+            self._recompute_flat()
 
     def snapshot(self) -> dict:
         st = self.table.state
@@ -641,6 +781,12 @@ class DeviceTableBackend:
                 "frozen": np.asarray(st["frozen"]),
                 "throttle_until": np.asarray(st["throttle_until"]),
                 "params": np.asarray(st["prog"]),
+                "weight": np.asarray(st["weight"]),
+                "cpu_max": np.asarray(st["cpu_max"]),
+                "flat_weight": np.asarray(st["flat_weight"]),
+                "vruntime": np.asarray(st["vruntime"]),
+                "cpu_used": np.asarray(st["cpu_used"]),
+                "cpu_stamp": np.asarray(st["cpu_stamp"]),
                 "root_usage": int(st["usage"][0])}
 
     def restore(self, snap: dict) -> None:
@@ -666,10 +812,18 @@ class DeviceTableBackend:
                 ("frozen", "frozen", jnp.bool_),
                 ("active", "active", jnp.bool_),
                 ("throttle_until", "throttle_until", jnp.int32),
-                ("prog", "params", jnp.float32)):
+                ("prog", "params", jnp.float32),
+                ("weight", "weight", jnp.int32),
+                ("cpu_max", "cpu_max", jnp.int32),
+                ("flat_weight", "flat_weight", jnp.float32),
+                ("vruntime", "vruntime", jnp.float32),
+                ("cpu_used", "cpu_used", jnp.int32),
+                ("cpu_stamp", "cpu_stamp", jnp.int32)):
             if src in snap:
                 st[key] = jnp.asarray(np.asarray(snap[src]), dtype)
         t.state = st
+        if "flat_weight" not in snap:      # older snapshot: re-flatten
+            self._recompute_flat()
 
     def set_time(self, t: float) -> None:
         self._now = t
@@ -933,6 +1087,21 @@ class AgentCgroup:
         if isinstance(path, int):
             path = self.path_of(path)
         self.backend.charge_unchecked(path, pages)
+
+    # ------------------------------------------------------------ scheduling
+
+    def schedule(self, paths: list, costs: list, step: int,
+                 budget: int) -> list:
+        """One weighted scheduling round (the sched_ext half): slot
+        ``i`` runs in domain ``paths[i]`` at step cost ``costs[i]``;
+        ``budget`` is the total cost grantable to weighted slots this
+        step.  Returns per-slot advance booleans and updates the
+        domains' vruntime / cpu.max window accounts.  With the default
+        program every runnable slot advances (the old binary gate);
+        attach ``WeightedFairProgram`` for cpu.weight-proportional
+        sharing."""
+        assert len(paths) == len(costs)
+        return self.backend.schedule(paths, costs, step, budget)
 
     # ------------------------------------------------------ subtree control
 

@@ -76,10 +76,18 @@ def new_state(capacity_pages: int, n_domains: int = 64,
         "throttle_until": jnp.zeros((n,), jnp.int32),
         "peak": jnp.zeros((n,), jnp.int32),
         "prog": prog.init_params(n),
+        # CPU scheduling rows (cpu.weight / cpu.max, core/sched.py)
+        "weight": jnp.full((n,), D.DEFAULT_WEIGHT, jnp.int32),
+        "cpu_max": jnp.full((n,), UNLIMITED, jnp.int32),
+        "flat_weight": jnp.zeros((n,), jnp.float32),
+        "vruntime": jnp.zeros((n,), jnp.float32),
+        "cpu_used": jnp.zeros((n,), jnp.int32),
+        "cpu_stamp": jnp.full((n,), -1, jnp.int32),
     }
     st["max"] = st["max"].at[0].set(capacity_pages)
     st["high"] = st["high"].at[0].set(capacity_pages)
     st["active"] = st["active"].at[0].set(True)
+    st["flat_weight"] = st["flat_weight"].at[0].set(1.0)
     return st
 
 
@@ -270,7 +278,9 @@ class DeviceDomainTable:
     # ------------------------------------------------------------ lifecycle
 
     def create(self, path: str, *, high: int = UNLIMITED, max: int = UNLIMITED,
-               low: int = 0, priority: int = D.NORMAL) -> int:
+               low: int = 0, priority: int = D.NORMAL,
+               weight: int = D.DEFAULT_WEIGHT,
+               cpu_max: int = UNLIMITED) -> int:
         assert path not in self.index, path
         parent_path = path.rsplit("/", 1)[0] or "/"
         pidx = self.index[parent_path]
@@ -291,6 +301,12 @@ class DeviceDomainTable:
             throttle_until=st["throttle_until"].at[idx].set(0),
             prog=st["prog"].at[idx].set(
                 jnp.asarray(self._fresh_row(path, pidx))),
+            weight=st["weight"].at[idx].set(weight),
+            cpu_max=st["cpu_max"].at[idx].set(cpu_max),
+            flat_weight=st["flat_weight"].at[idx].set(0.0),
+            vruntime=st["vruntime"].at[idx].set(0.0),
+            cpu_used=st["cpu_used"].at[idx].set(0),
+            cpu_stamp=st["cpu_stamp"].at[idx].set(-1),
         )
         return idx
 
@@ -305,7 +321,13 @@ class DeviceDomainTable:
         st = self.state
         self.state = dict(st, active=st["active"].at[idx].set(False),
                           frozen=st["frozen"].at[idx].set(False),
-                          parent=st["parent"].at[idx].set(-1))
+                          parent=st["parent"].at[idx].set(-1),
+                          weight=st["weight"].at[idx].set(D.DEFAULT_WEIGHT),
+                          cpu_max=st["cpu_max"].at[idx].set(UNLIMITED),
+                          flat_weight=st["flat_weight"].at[idx].set(0.0),
+                          vruntime=st["vruntime"].at[idx].set(0.0),
+                          cpu_used=st["cpu_used"].at[idx].set(0),
+                          cpu_stamp=st["cpu_stamp"].at[idx].set(-1))
         heapq.heappush(self._free, idx)
 
     def set_frozen(self, path: str, flag: bool) -> None:

@@ -270,6 +270,14 @@ class AsyncDaemonBackend:
         return self._submit("try_charge", path, pages, step,
                             want_result=True)
 
+    def schedule(self, paths: list, costs: list, step: int,
+                 budget: int) -> list:
+        """Result-bearing like ``try_charge``: the round runs on the
+        daemon after everything queued before it (a weight write queued
+        earlier lands before the slots are ranked)."""
+        return self._submit("schedule", paths, costs, step, budget,
+                            want_result=True)
+
     def uncharge(self, path: str, pages: int) -> None:
         self._submit("uncharge", path, pages)
 

@@ -35,6 +35,9 @@ UNLIMITED = (1 << 31) - 1          # int32-safe "no limit" sentinel
 # priorities
 LOW, NORMAL, HIGH = 0, 1, 2
 
+# cpu.weight default (cgroup v2: weights in [1, 10000], default 100)
+DEFAULT_WEIGHT = 100
+
 # Graduated-throttle defaults (get_high_delay_ms curve) — the single
 # source for ``ControllerConfig``, ``GraduatedThrottleProgram``, and the
 # host tree's reference ``throttle_delay_ms``.
@@ -56,6 +59,13 @@ class Domain:
     peak: int = 0
     frozen: bool = False
     killed: bool = False
+    # CPU scheduling (cpu.weight / cpu.max — the sched_ext half)
+    weight: int = DEFAULT_WEIGHT   # cpu.weight (1..10000)
+    cpu_max: int = UNLIMITED       # cpu.max: step-cost quota per window
+    flat_weight: float = 0.0       # flattened hierarchical weight (root 1.0)
+    vruntime: float = 0.0          # weighted-fair account
+    cpu_used: int = 0              # window usage (lazy reset via stamp)
+    cpu_stamp: int = -1            # window index cpu_used belongs to
     # program-imposed throttle deadline (clock units of the caller —
     # see HostTreeBackend.try_charge); DomainTree itself never gates on
     # it, the attached PolicyProgram does
@@ -104,11 +114,14 @@ class DomainTree:
     # ------------------------------------------------------------ lifecycle
 
     def create(self, path: str, *, high: int = UNLIMITED, max: int = UNLIMITED,
-               low: int = 0, priority: int = NORMAL) -> Domain:
+               low: int = 0, priority: int = NORMAL,
+               weight: int = DEFAULT_WEIGHT,
+               cpu_max: int = UNLIMITED) -> Domain:
         assert path.startswith("/") and path not in self._index, path
         parent_path = path.rsplit("/", 1)[0] or "/"
         parent = self._index[parent_path]
-        d = Domain(path, parent, high=high, max=max, low=low, priority=priority)
+        d = Domain(path, parent, high=high, max=max, low=low,
+                   priority=priority, weight=weight, cpu_max=cpu_max)
         parent.children[path] = d
         self._index[path] = d
         self.log.emit(self.now_ms, Ev.CREATE, path, high=high, max=max)

@@ -40,7 +40,7 @@ import numpy as np
 # clean so observation never perturbs the run)
 MUTATING_OPS = ("mkdir", "rmdir", "write", "try_charge", "uncharge",
                 "charge_unchecked", "freeze", "thaw", "kill",
-                "attach", "update_params")
+                "attach", "update_params", "schedule")
 
 
 class TransientBackendError(RuntimeError):

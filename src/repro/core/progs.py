@@ -89,6 +89,28 @@ class Verdict(NamedTuple):
     params: jax.Array           # (P,) f32
 
 
+class SchedRequest(NamedTuple):
+    """One slot asking for a step grant, as seen by ``on_schedule``."""
+    dom: jax.Array        # scheduled domain handle (i32 scalar)
+    cost: jax.Array       # step cost in budget units (i32 scalar)
+    step: jax.Array       # engine step (i32 scalar)
+
+
+class SchedView(NamedTuple):
+    """The scheduled domain's ancestor chain (self-first, masked like
+    ``ChainView``) plus its CPU scheduling account.  ``weight`` and
+    ``flat_weight`` are the *charged domain's* scalars (the flattened
+    weight already folds the ancestors in, as scx_flatcg does)."""
+    valid: jax.Array            # (depth,) bool
+    frozen: jax.Array           # (depth,) bool
+    throttle_until: jax.Array   # (depth,) i32/f32, same clock as req.step
+    weight: jax.Array           # i32 scalar — the domain's own cpu.weight
+    flat_weight: jax.Array      # f32 scalar — flattened hierarchical weight
+    vruntime: jax.Array         # f32 scalar — fairness account
+    priority: jax.Array         # i32 scalar
+    params: jax.Array           # (P,) f32 — the domain's program row
+
+
 class PolicyProgram:
     """Base program: the bare memcg contract, no throttling.
 
@@ -100,6 +122,8 @@ class PolicyProgram:
 
     param_names: tuple = ()
     step_ms: float = 10.0        # delay quantum (trace constant)
+    sched_window: int = 100      # cpu.max accounting window, steps
+    sched_lag: float = 8.0       # max vruntime lag a waking domain keeps
 
     # ------------------------------------------------------- param table
 
@@ -156,6 +180,14 @@ class PolicyProgram:
         frozen = jnp.any(view.valid & view.frozen)
         throttled = jnp.any(view.valid & (view.throttle_until > step))
         return ~frozen & ~throttled
+
+    def on_schedule(self, view: SchedView, req: SchedRequest) -> jax.Array:
+        """Scheduling weight (f32) for one runnable slot.  A weight
+        ``<= 0`` means "outside the weighted scheduler": the slot
+        advances whenever the gate allows, without consuming the step
+        budget — which is exactly the old binary ``slot_gate``
+        behaviour.  The base program IS the trivial program."""
+        return jnp.float32(0.0)
 
     # ------------------------------------------------- host-daemon helper
 

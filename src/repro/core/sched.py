@@ -1,0 +1,192 @@
+"""Hierarchical weighted step scheduler — the sched_ext/scx_flatcg half.
+
+The paper's in-kernel enforcement has two halves: memcg_bpf_ops (the
+charge path, ``core/progs.py``) and sched_ext — the reference daemon
+launches ``scx_flatcg`` to schedule CPU through cgroup weights.  This
+module is the in-repo analogue: it turns the binary ``slot_gate`` into
+a weighted step scheduler that allocates decode slots and prefill
+budget proportionally to *flattened hierarchical weights*.
+
+Like flatcg, the hierarchy is flattened ahead of time: a domain's
+``flat_weight`` is the product of (own weight / sibling weight sum)
+along its path, recomputed host-side at lifecycle rate (mkdir / rmdir /
+``cpu.weight`` writes) into a ``(n_domains,)`` f32 row of the control
+state — so a weight write is a pure state write and never retraces the
+step function.  Per-step scheduling then needs no tree walk:
+
+  1. every slot asks its program for a scheduling weight
+     (``on_schedule``; ``<= 0`` means "outside the weighted scheduler"
+     — the slot advances whenever the gate allows, without consuming
+     budget, which is exactly the old binary gate);
+  2. runnable weighted slots are ranked by their domain's ``vruntime``
+     (a fairness account: granted slots pay ``cost / weight``, so
+     low-weight domains age faster), ties broken by slot index;
+  3. grants are taken greedily until the step ``budget`` is spent;
+  4. ``cpu.max`` acts as a hard per-window throttle: a domain whose
+     window usage (self or any ancestor) has reached its quota is not
+     runnable until the window rolls over (lazy stamp reset).
+
+A waking domain's lag is clamped to ``sched_lag`` behind the current
+minimum, so a bursty domain that idled does not return with unbounded
+credit and starve steady ones — the vruntime floor EEVDF/CFS apply.
+
+Every backend runs the SAME ``schedule_decision``: host-side through
+the shared jitted entry point, the device table inside the jitted
+engine step, the sharded table per shard under ``shard_map``, and the
+async daemon passes it through to its inner backend.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import domains as D
+from repro.core.controller import (DEPTH, UNLIMITED, _ancestor_chain,
+                                   _chain_view)
+from repro.core.progs import (GraduatedThrottleProgram, SchedRequest,
+                              SchedView, as_program)
+
+DEFAULT_WEIGHT = D.DEFAULT_WEIGHT
+MIN_WEIGHT, MAX_WEIGHT = 1, 10000
+
+
+def check_weight(value: int) -> int:
+    v = int(value)
+    if not (MIN_WEIGHT <= v <= MAX_WEIGHT):
+        raise ValueError(f"cpu.weight must be in "
+                         f"[{MIN_WEIGHT}, {MAX_WEIGHT}], got {value}")
+    return v
+
+
+def flat_weights_by_path(weights: dict) -> dict:
+    """Flatten the hierarchy the way scx_flatcg does: ``flat(d) =
+    flat(parent) * weight(d) / sum(sibling weights)``, root 1.0.
+
+    ``weights`` maps every live path to its ``cpu.weight``.  Pure host
+    math over the logical tree (NOT the device arrays), so every
+    backend — including the sharded one, whose per-shard tables only
+    see a slice of the tree — stores identical values.  Sibling sums
+    are integer sums; the division result is cast to f32 exactly once,
+    keeping the row bit-identical across backends.
+    """
+    kids: dict = {}
+    for p in weights:
+        if p != "/":
+            kids.setdefault(p.rsplit("/", 1)[0] or "/", []).append(p)
+    flat = {"/": np.float32(1.0)}
+    stack = ["/"]
+    while stack:
+        q = stack.pop()
+        ch = sorted(kids.get(q, []))
+        tot = sum(weights[c] for c in ch)
+        for c in ch:
+            flat[c] = np.float32(float(flat[q]) * weights[c] / tot)
+            stack.append(c)
+    return flat
+
+
+def schedule_decision(prog, state: dict, dom: jax.Array, cost: jax.Array,
+                      step, budget):
+    """One scheduling round, shared verbatim by every backend.
+
+    ``dom[i]``/``cost[i]`` describe slot ``i`` (-1 = empty slot);
+    ``budget`` is the total step cost grantable to *weighted* slots.
+    Returns ``(new_state, advance)`` where ``advance[i]`` says slot
+    ``i`` may run this step.  Deterministic: vruntime ranking with
+    slot-index tie-break, quota checked against pre-step window usage.
+    """
+    prog = as_program(prog)
+    dom = dom.astype(jnp.int32)
+    cost = cost.astype(jnp.int32)
+    step = jnp.asarray(step, jnp.int32)
+    window = step // prog.sched_window
+    eff_used = jnp.where(state["cpu_stamp"] == window, state["cpu_used"], 0)
+
+    def per_slot(d, a):
+        view = _chain_view(state, state["usage"], state["throttle_until"],
+                           state["prog"], d)
+        gate = (d >= 0) & prog.on_gate(view, step)
+        chain = _ancestor_chain(state["parent"], jnp.maximum(d, 0))
+        cvalid = (chain >= 0) & (d >= 0)
+        cidx = jnp.maximum(chain, 0)
+        capped = cvalid & (state["cpu_max"][cidx] < UNLIMITED)
+        quota_ok = ~jnp.any(capped & (eff_used[cidx]
+                                      >= state["cpu_max"][cidx]))
+        di = jnp.maximum(d, 0)
+        sview = SchedView(
+            valid=cvalid,
+            frozen=jnp.where(cvalid, state["frozen"][cidx], False),
+            throttle_until=jnp.where(cvalid,
+                                     state["throttle_until"][cidx], 0),
+            weight=state["weight"][di],
+            flat_weight=state["flat_weight"][di],
+            vruntime=state["vruntime"][di],
+            priority=state["priority"][di],
+            params=state["prog"][di],
+        )
+        w = jnp.asarray(prog.on_schedule(sview, SchedRequest(d, a, step)),
+                        jnp.float32)
+        return gate & quota_ok, w
+
+    runnable, w = jax.vmap(per_slot)(dom, cost)
+    weighted = runnable & (w > 0)
+    bypass = runnable & (w <= 0)
+
+    m = dom.shape[0]
+    di = jnp.maximum(dom, 0)
+    key = jnp.where(weighted, state["vruntime"][di], jnp.inf)
+    order = jnp.lexsort((jnp.arange(m), key))
+    cum = jnp.cumsum(jnp.where(weighted, cost, 0)[order])
+    granted = jnp.zeros((m,), bool).at[order].set(
+        weighted[order] & (cum <= jnp.asarray(budget, jnp.int32)))
+    advance = granted | bypass
+
+    # fairness account: granted weighted slots pay cost / weight
+    pay = jnp.where(granted, cost.astype(jnp.float32)
+                    / jnp.maximum(w, 1e-9), 0.0)
+    vr = state["vruntime"].at[di].add(jnp.where(dom >= 0, pay, 0.0))
+    # lag clamp: nobody trails the pack by more than sched_lag
+    vmin = jnp.min(jnp.where(weighted, vr[di], jnp.inf),
+                   initial=jnp.inf)   # identity: m may be 0 (no slots)
+    floor = jnp.where(jnp.any(weighted),
+                      vmin - jnp.float32(prog.sched_lag), -jnp.inf)
+    vr = jnp.where(state["active"], jnp.maximum(vr, floor), vr)
+
+    # cpu.max window accounting: advancing slots charge their chain
+    chains = jax.vmap(lambda d: _ancestor_chain(
+        state["parent"], jnp.maximum(d, 0)))(dom)
+    cvalid = (chains >= 0) & (dom >= 0)[:, None] & advance[:, None]
+    add = jnp.where(cvalid, cost[:, None], 0)
+    used = eff_used.at[jnp.maximum(chains, 0).reshape(-1)].add(
+        add.reshape(-1))
+    new_state = dict(state, vruntime=vr, cpu_used=used,
+                     cpu_stamp=jnp.full_like(state["cpu_stamp"], window))
+    return new_state, advance
+
+
+# one shared jitted entry point for every host-path caller — host tree,
+# device table, sharded reconciliation — so they trace identical code
+jit_schedule = jax.jit(schedule_decision, static_argnums=(0,))
+
+
+class WeightedFairProgram(GraduatedThrottleProgram):
+    """The stock weighted-fair scheduler program: weighted slots get
+    their domain's flattened hierarchical weight scaled by a live
+    ``sched_boost`` (power of two, 0 = neutral) — the zero-retrace
+    retune knob.  ``sched_on`` gates the scheduler per domain so the
+    neutral row (outside the attach scope) degrades to the trivial
+    bypass program, like every other stock program's neutral row."""
+
+    param_names = GraduatedThrottleProgram.param_names + (
+        "sched_boost", "sched_on")
+
+    def default_row(self) -> np.ndarray:
+        return np.concatenate([super().default_row(),
+                               np.asarray([0.0, 1.0], np.float32)])
+
+    # neutral_row: inherited all-zeros — sched_on 0 disables weighting
+
+    def on_schedule(self, view, req):
+        w = view.flat_weight * jnp.exp2(view.params[4])
+        return jnp.where(view.params[5] > 0, w, jnp.float32(0.0))

@@ -159,6 +159,25 @@ class ShardedDeviceView:
         (g2,) = self._run(local, state, dom2, step2, n_out=1)
         return g2[shard, jnp.arange(m)] & valid
 
+    def schedule(self, state, dom, cost, step, budget):
+        """In-step weighted scheduling: every shard runs the shared
+        ``schedule_decision`` over its own tenants' slots with a
+        *per-shard* budget (the per-device-group convention, like
+        ``pool_pages``) — no cross-device traffic on the hot path."""
+        from repro.core import sched as S
+        m = dom.shape[0]
+        valid, shard, dom2 = self._split(dom)
+        cost2 = jnp.broadcast_to(cost.astype(jnp.int32)[None, :],
+                                 (self.n_shards, m))
+        step2 = jnp.broadcast_to(jnp.asarray(step, jnp.int32)[None],
+                                 (self.n_shards,))
+
+        def local(st, d, c, s):
+            return S.schedule_decision(self.prog, st, d, c, s[()], budget)
+
+        new_state, a2 = self._run(local, state, dom2, cost2, step2, n_out=2)
+        return new_state, a2[shard, jnp.arange(m)] & valid
+
     def commit(self, state: dict) -> None:
         self._backend.state = state
 
@@ -230,6 +249,26 @@ class ShardedTableBackend:
                     prog = prog.at[s, i, c].set(v)
         self.state = dict(self.state, prog=prog)
 
+    def _recompute_flat(self) -> None:
+        """Re-flatten hierarchical weights across the *global* logical
+        tree (lifecycle rate).  Same host math as every other backend —
+        ``flat_weights_by_path`` — so the per-shard rows hold the exact
+        values the host reference computes even though each shard only
+        sees a slice of the tree.  Every shard's local root mirrors the
+        global root (flat 1.0)."""
+        from repro.core.sched import flat_weights_by_path
+        w = np.asarray(self.state["weight"])
+        flat = flat_weights_by_path(
+            {p: int(w[s, i]) for p, (s, i) in self.index.items()})
+        arr = np.zeros((self.n_shards, self.per_shard_domains), np.float32)
+        arr[:, 0] = 1.0
+        for p, (s, i) in self.index.items():
+            if p != "/":
+                arr[s, i] = flat[p]
+        sh = NamedSharding(self.mesh, P("shard"))
+        self.state = dict(self.state,
+                          flat_weight=jax.device_put(jnp.asarray(arr), sh))
+
     # ------------------------------------------------------------ placement
 
     @property
@@ -286,6 +325,8 @@ class ShardedTableBackend:
             "high": spec.high, "max": spec.max, "low": spec.low,
             "parent": pidx, "priority": spec.priority, "usage": 0,
             "peak": 0, "frozen": False, "active": True, "throttle_until": 0,
+            "weight": spec.weight, "cpu_max": spec.cpu_max,
+            "vruntime": 0.0, "cpu_used": 0, "cpu_stamp": -1,
         }
         if not self._in_scope(path):
             row = self.prog.neutral_row()
@@ -296,6 +337,7 @@ class ShardedTableBackend:
         self.state = dict(st, **{
             k: st[k].at[shard, idx].set(v) for k, v in upd.items()},
             prog=st["prog"].at[shard, idx].set(jnp.asarray(row)))
+        self._recompute_flat()
         self.log.emit(self._now, Ev.CREATE, path, high=spec.high,
                       max=spec.max, shard=shard)
         return self._handle(shard, idx)
@@ -314,9 +356,15 @@ class ShardedTableBackend:
             st,
             active=st["active"].at[shard, idx].set(False),
             frozen=st["frozen"].at[shard, idx].set(False),
-            parent=st["parent"].at[shard, idx].set(-1))
+            parent=st["parent"].at[shard, idx].set(-1),
+            weight=st["weight"].at[shard, idx].set(D.DEFAULT_WEIGHT),
+            cpu_max=st["cpu_max"].at[shard, idx].set(UNLIMITED),
+            vruntime=st["vruntime"].at[shard, idx].set(0.0),
+            cpu_used=st["cpu_used"].at[shard, idx].set(0),
+            cpu_stamp=st["cpu_stamp"].at[shard, idx].set(-1))
         del self.index[path]
         heapq.heappush(self._free[shard], idx)
+        self._recompute_flat()
         if transfer_residual and residual and parent is not None:
             self.charge_unchecked(parent, residual)
         self.log.emit(self._now, Ev.REMOVE, path)
@@ -404,6 +452,42 @@ class ShardedTableBackend:
         sub = C.host_charge(self._slice(shard), idx, pages)
         self._adopt(shard, sub, keys=("usage", "peak"))
 
+    # ------------------------------------------------ scheduling (host path)
+
+    def schedule(self, paths: list, costs: list, step: int,
+                 budget: int) -> list:
+        """Host-driven weighted scheduling round, bit-exact with the
+        host reference: the per-shard tables are flattened to one
+        global view (parents rebased, like ``snapshot``) and run
+        through the shared jitted ``schedule_decision`` with the global
+        budget; the updated accounts scatter back per shard.  The
+        in-step path (``device_view().schedule``) instead runs per
+        shard with a per-shard budget — the per-device-group
+        convention."""
+        from repro.core.sched import jit_schedule
+        st = {k: np.asarray(v) for k, v in self.state.items()}
+        S, n = self.n_shards, self.per_shard_domains
+        base = (np.arange(S) * n)[:, None]
+        parent = np.where(st["parent"] >= 0, st["parent"] + base, -1)
+        flat = {k: jnp.asarray(st[k].reshape(-1))
+                for k in ("usage", "high", "max", "low", "priority",
+                          "frozen", "active", "throttle_until", "weight",
+                          "cpu_max", "flat_weight", "vruntime", "cpu_used",
+                          "cpu_stamp")}
+        flat["parent"] = jnp.asarray(parent.reshape(-1))
+        flat["prog"] = jnp.asarray(st["prog"].reshape(S * n, -1))
+        dom = jnp.asarray([self._handle(*self.index[p]) for p in paths],
+                          jnp.int32)
+        cost = jnp.asarray(list(costs), jnp.int32)
+        new, advance = jit_schedule(self.prog, flat, dom, cost, int(step),
+                                    int(budget))
+        sh = NamedSharding(self.mesh, P("shard"))
+        self.state = dict(self.state, **{
+            k: jax.device_put(
+                jnp.asarray(np.asarray(new[k]).reshape(S, n)), sh)
+            for k in ("vruntime", "cpu_used", "cpu_stamp")})
+        return [bool(a) for a in np.asarray(advance)]
+
     # ------------------------------------------------------ subtree control
 
     def _subtree(self, path: str) -> list[str]:
@@ -452,20 +536,40 @@ class ShardedTableBackend:
     _FILE_KEY = {"memory.current": "usage", "memory.peak": "peak",
                  "memory.high": "high", "memory.max": "max",
                  "memory.low": "low", "memory.priority": "priority",
-                 "cgroup.freeze": "frozen"}
+                 "cgroup.freeze": "frozen", "cpu.weight": "weight",
+                 "cpu.max": "cpu_max"}
+
+    def reconcile(self) -> dict:
+        """Host-side reconciliation of the global root across device
+        groups, gathered shard by shard: usage and peak sum over the
+        shard-local roots, throttle is a flag (any group throttled).
+        This is the seam the chaos harness targets — the optional
+        ``reconcile_hook(shard)`` attribute runs between per-shard
+        gathers, where fault injection (or a concurrent lifecycle op)
+        can land mid-reconciliation."""
+        hook = getattr(self, "reconcile_hook", None)
+        usage = peak = 0
+        throttled = False
+        for s in range(self.n_shards):
+            if hook is not None:
+                hook(s)
+            usage += int(self.state["usage"][s, 0])
+            peak += int(self.state["peak"][s, 0])
+            throttled |= bool(self.state["throttle_until"][s, 0] > 0)
+        return {"usage": usage, "peak": peak, "throttled": throttled}
 
     def read(self, path: str, file: str):
         if path == "/":
             # reconcile the global root across device groups
             if file == "memory.current":
-                return self._root_total()
+                return self.reconcile()["usage"]
             if file == "memory.peak":
-                return int(jnp.sum(self.state["peak"][:, 0]))
+                return self.reconcile()["peak"]
             if file == "memory.events":
                 # flag, not a shard count — DeviceTableBackend semantics
-                tu = self.state["throttle_until"][:, 0]
                 return {"high": 0, "max": 0,
-                        "throttle": int(bool(jnp.any(tu > 0))), "oom_kill": 0}
+                        "throttle": int(self.reconcile()["throttled"]),
+                        "oom_kill": 0}
             return int(self.state[self._FILE_KEY[file]][0, 0])
         shard, idx = self.index[path]
         if file == "memory.events":
@@ -478,6 +582,9 @@ class ShardedTableBackend:
         if file == "cgroup.freeze":
             (self.freeze if int(value) else self.thaw)(path)
             return
+        if file == "cpu.weight":
+            from repro.core.sched import check_weight
+            value = check_weight(value)
         key = self._FILE_KEY[file]
         st = self.state
         if path == "/":                # root limits apply to every group
@@ -485,10 +592,12 @@ class ShardedTableBackend:
                 self.capacity = int(value)
             self.state = dict(st, **{
                 key: st[key].at[:, 0].set(int(value))})
-            return
-        shard, idx = self.index[path]
-        self.state = dict(st, **{
-            key: st[key].at[shard, idx].set(int(value))})
+        else:
+            shard, idx = self.index[path]
+            self.state = dict(st, **{
+                key: st[key].at[shard, idx].set(int(value))})
+        if file == "cpu.weight":
+            self._recompute_flat()
 
     # --------------------------------------------------------------- queries
 
@@ -515,6 +624,12 @@ class ShardedTableBackend:
                 "frozen": st["frozen"].reshape(-1),
                 "throttle_until": st["throttle_until"].reshape(-1),
                 "params": st["prog"].reshape(S * n, -1),
+                "weight": st["weight"].reshape(-1),
+                "cpu_max": st["cpu_max"].reshape(-1),
+                "flat_weight": st["flat_weight"].reshape(-1),
+                "vruntime": st["vruntime"].reshape(-1),
+                "cpu_used": st["cpu_used"].reshape(-1),
+                "cpu_stamp": st["cpu_stamp"].reshape(-1),
                 "root_usage": int(st["usage"][:, 0].sum()),
                 "root_handles": [s * n for s in range(S)],
                 "placement": dict(self._tenant_shard),
@@ -550,7 +665,13 @@ class ShardedTableBackend:
                 ("priority", "priority", jnp.int32),
                 ("frozen", "frozen", jnp.bool_),
                 ("active", "active", jnp.bool_),
-                ("throttle_until", "throttle_until", jnp.int32)):
+                ("throttle_until", "throttle_until", jnp.int32),
+                ("weight", "weight", jnp.int32),
+                ("cpu_max", "cpu_max", jnp.int32),
+                ("flat_weight", "flat_weight", jnp.float32),
+                ("vruntime", "vruntime", jnp.float32),
+                ("cpu_used", "cpu_used", jnp.int32),
+                ("cpu_stamp", "cpu_stamp", jnp.int32)):
             if src in snap:
                 arr = np.asarray(snap[src]).reshape(S, n)
                 new[key] = jax.device_put(jnp.asarray(arr, dtype), sh)
@@ -558,6 +679,8 @@ class ShardedTableBackend:
         params = np.asarray(snap["params"]).reshape(S, n, -1)
         new["prog"] = jax.device_put(jnp.asarray(params, jnp.float32), sh)
         self.state = new
+        if "flat_weight" not in snap:      # older snapshot: re-flatten
+            self._recompute_flat()
 
     def set_time(self, t: float) -> None:
         self._now = t

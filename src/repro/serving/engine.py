@@ -74,6 +74,11 @@ class EngineConfig:
     use_intent: bool = True
     use_tool_domains: bool = True
     use_freeze: bool = True              # graceful-degradation step 2
+    # weighted CPU scheduler (cpu.weight / cpu.max): when set, at most
+    # ``sched_slots`` weighted slots advance per step, picked by the
+    # hierarchical fair scheduler (core/sched.py).  None keeps the
+    # binary slot gate — the pre-scheduler behavior, bit for bit.
+    sched_slots: Optional[int] = None
     # intent hints in engine pages (LOW/MEDIUM/HIGH priority of Hint enum)
     intent_high_pages: Optional[dict] = None
     session_high: Optional[dict] = None  # sid -> memory.high (pages)
@@ -89,6 +94,17 @@ def _make_step_fn(cfg: ModelConfig, perf: PerfConfig, ecfg: EngineConfig,
     @functools.partial(jax.jit, static_argnames=("mode",), donate_argnums=(1, 2))
     def step_fn(params, dstate, ctrl, tokens, lengths, dom, amt, host_gate,
                 step_no, key, *, mode: str):
+        if ecfg.sched_slots is not None:
+            # weighted step scheduler: rank this step's runnable slots by
+            # vruntime and grant at most sched_slots of them; a slot the
+            # scheduler defers simply does not advance this step (its
+            # charge never reaches the memory controller).  Slots whose
+            # program weight is <= 0 bypass the budget entirely, so the
+            # stock program keeps this a no-op.
+            cost = (dom >= 0).astype(jnp.int32)
+            ctrl, advance = view.schedule(ctrl, dom, cost, step_no,
+                                          ecfg.sched_slots)
+            dom = jnp.where(advance, dom, -1)
         if mode == "inkernel":
             # in-step enforcement: charge + gate inside the same program
             ctrl, granted, stalled = view.charge(ctrl, dom, amt, step_no)

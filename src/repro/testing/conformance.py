@@ -38,6 +38,7 @@ step runs on the op-index step clock):
     ("update_params", path, {kv})           ("set_time", t)
     ("lease_open", tool, hint|None, parent[, {kw}])
     ("lease_feedback", tool, reason)*       ("lease_close", tool)*
+    ("schedule", paths, costs, budget[, step])*
     ("flush",)
 
 Starred ops record an observation; every replay ends with a flush (a
@@ -140,6 +141,10 @@ def replay(cg: AgentCgroup, scenario: Scenario) -> list:
                         (fb.reason, fb.peak_pages, fb.limit_pages)))
         elif name == "lease_close":
             obs.append((i, "lease_close", leases[a[0]].close()))
+        elif name == "schedule":
+            step = a[3] if len(a) > 3 else i
+            adv = cg.schedule(list(a[0]), list(a[1]), step, a[2])
+            obs.append((i, "schedule", tuple(bool(x) for x in adv)))
         elif name == "flush":
             cg.flush()
         else:
@@ -218,6 +223,17 @@ class OpRecorder:
 def _zero_delay() -> GraduatedThrottleProgram:
     """Grant/deny semantics isolated from op timing."""
     return GraduatedThrottleProgram(base_delay_ms=0.0, max_delay_ms=0.0)
+
+
+def _weighted_fair():
+    """Scheduler semantics isolated from throttle timing."""
+    from repro.core.sched import WeightedFairProgram
+    return WeightedFairProgram(base_delay_ms=0.0, max_delay_ms=0.0)
+
+
+def _sched_rounds(paths: tuple, costs: tuple, budget: int,
+                  steps) -> tuple:
+    return tuple(("schedule", paths, costs, budget, s) for s in steps)
 
 
 def _std_tree(*extra) -> tuple:
@@ -400,6 +416,50 @@ STANDARD_SCENARIOS: tuple = (
              ("charge", "/s", 1),             # deny: frozen
              ("write", "/s", "cgroup.freeze", 0),
              ("charge", "/s", 1))),           # grant
+    Scenario(
+        "cpu_weight_fair",
+        description="weighted step scheduler: a 300/100 cpu.weight split "
+                    "grants 3:1 under a 1-slot budget; a live cpu.weight "
+                    "write rebalances with vruntime carried across steps",
+        programs={"wfair": _weighted_fair},
+        ops=(("attach", "/", "wfair"),
+             ("mkdir", "/a", {"weight": 300}),
+             ("mkdir", "/b", {"weight": 100}),
+             ("read", "/a", "cpu.weight"), ("read", "/b", "cpu.weight"),
+             ("read", "/a", "cpu.max"))
+            + _sched_rounds(("/a", "/b"), (1, 1), 1, range(8))
+            + (("write", "/b", "cpu.weight", 300),
+               ("read", "/b", "cpu.weight"))
+            + _sched_rounds(("/a", "/b"), (1, 1), 1, range(8, 16))),
+    Scenario(
+        "cpu_max_quota",
+        description="cpu.max as a hard per-window throttle: the capped "
+                    "tenant stops advancing once its window quota is "
+                    "spent and resumes at the next window (never on the "
+                    "root — per-shard roots make that quota diverge)",
+        programs={"wfair": _weighted_fair},
+        ops=(("attach", "/", "wfair"),
+             ("mkdir", "/t"),
+             ("mkdir", "/t/a", {"cpu_max": 3}),
+             ("mkdir", "/t/b"),
+             ("read", "/t/a", "cpu.max"))
+            + _sched_rounds(("/t/a", "/t/b"), (1, 1), 8, range(6))
+            + _sched_rounds(("/t/a", "/t/b"), (1, 1), 8, (100, 101))),
+    Scenario(
+        "sched_retune",
+        description="update_params(sched_boost=...) retunes a tenant's "
+                    "effective weight live — the zero-retrace knob — and "
+                    "freeze removes a slot from the runnable set",
+        programs={"wfair": _weighted_fair},
+        ops=(("attach", "/", "wfair"),
+             ("mkdir", "/a"), ("mkdir", "/b"))
+            + _sched_rounds(("/a", "/b"), (1, 1), 1, range(4))
+            + (("update_params", "/a", {"sched_boost": 2.0}),)
+            + _sched_rounds(("/a", "/b"), (1, 1), 1, range(4, 14))
+            + (("freeze", "/a"),)
+            + _sched_rounds(("/a", "/b"), (1, 1), 1, range(14, 17))
+            + (("thaw", "/a"),)
+            + _sched_rounds(("/a", "/b"), (1, 1), 1, range(17, 20))),
 )
 
 _BY_NAME = {s.name: s for s in STANDARD_SCENARIOS}

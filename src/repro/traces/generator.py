@@ -45,6 +45,12 @@ BURST_MB = {
     "glm": {"test": (90.0, 0.8, 234.0), "pip": (90.0, 0.8, 233.0),
             "python": (80.0, 0.8, 250.0), "file": (4.5, 0.5, 10.0),
             "git": (13.5, 0.5, 30.0), "build": (250.0, 0.7, 600.0)},
+    # a third burst-shape class between the two measured ones: bash-heavy
+    # like GLM but with Haiku-class test bursts — lets the benchmarks
+    # compare one policy across trace classes, not just across policies
+    "qwen": {"test": (130.0, 0.9, 400.0), "pip": (90.0, 0.8, 233.0),
+             "python": (70.0, 0.8, 220.0), "file": (4.5, 0.5, 10.0),
+             "git": (13.5, 0.5, 30.0), "build": (250.0, 0.7, 600.0)},
 }
 
 # share of bash *time* per category
@@ -53,6 +59,8 @@ BASH_TIME_SHARE = {
               "git": 0.04, "build": 0.021},
     "glm": {"test": 0.437, "pip": 0.10, "python": 0.269, "file": 0.10,
             "git": 0.074, "build": 0.02},
+    "qwen": {"test": 0.58, "pip": 0.12, "python": 0.17, "file": 0.08,
+             "git": 0.04, "build": 0.01},
 }
 
 # share of total tool time per tool
@@ -60,14 +68,17 @@ TOOL_TIME_SHARE = {
     "haiku": {"Bash": 0.478, "SubAgent": 0.432, "Read": 0.04, "Edit": 0.03,
               "Write": 0.01, "WebSearch": 0.01},
     "glm": {"Bash": 0.981, "Read": 0.01, "Edit": 0.007, "Write": 0.002},
+    "qwen": {"Bash": 0.86, "SubAgent": 0.06, "Read": 0.04, "Edit": 0.03,
+             "Write": 0.01},
 }
 
-DURATION_MEAN_S = {"haiku": 5.8 * 60, "glm": 10.8 * 60}
-BASELINE_MB = {"haiku": 183.0, "glm": 188.0}
-RETRY_TASK_FRAC = {"haiku": 0.85, "glm": 0.97}
-RETRY_GROUPS_MEAN = {"haiku": 1.8, "glm": 3.9}
-CPU_IDLE = {"haiku": 8.0, "glm": 4.0}          # % of one core outside calls
-CPU_BURST = {"haiku": 120.0, "glm": 90.0}      # mean % during tool calls
+DURATION_MEAN_S = {"haiku": 5.8 * 60, "glm": 10.8 * 60, "qwen": 7.5 * 60}
+BASELINE_MB = {"haiku": 183.0, "glm": 188.0, "qwen": 176.0}
+RETRY_TASK_FRAC = {"haiku": 0.85, "glm": 0.97, "qwen": 0.92}
+RETRY_GROUPS_MEAN = {"haiku": 1.8, "glm": 3.9, "qwen": 2.8}
+# % of one core outside calls / mean % during tool calls
+CPU_IDLE = {"haiku": 8.0, "glm": 4.0, "qwen": 6.0}
+CPU_BURST = {"haiku": 120.0, "glm": 90.0, "qwen": 105.0}
 
 
 def _lognormal(rng, mean, sigma):

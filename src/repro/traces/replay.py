@@ -134,11 +134,17 @@ class ReplayResult:
 
 class Replay:
     def __init__(self, traces: list, priorities: list, policy: BasePolicy,
-                 cfg: ReplayConfig, *, program=None):
+                 cfg: ReplayConfig, *, program=None, backend=None):
+        """``backend``: any ``Backend`` to drive the replay through
+        (default: a fresh host tree).  Lets the chaos harness run the
+        whole simulation over a ``FaultyBackend`` — with a transient-
+        only plan and auto-retry the results must be bit-identical to
+        the default run."""
         assert len(traces) == len(priorities)
         self.cfg = cfg
         self.policy = policy
-        self.cg = AgentCgroup(HostTreeBackend(cfg.capacity_mb))
+        self.cg = AgentCgroup(backend if backend is not None
+                              else HostTreeBackend(cfg.capacity_mb))
         if program is not None:
             self.cg.attach("/", program)
         self.log = self.cg.log

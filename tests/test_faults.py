@@ -141,6 +141,99 @@ def test_spurious_kill_routes_into_escalation_and_recovers():
     new.close()
 
 
+# --------------------------------------- sharded reconciliation under chaos
+
+
+def test_sharded_reconcile_transient_between_shard_gathers():
+    """Chaos at the reconciliation seam: FaultPlan-driven transients
+    fire BETWEEN the per-shard gathers of ``reconcile`` (the
+    ``reconcile_hook`` seam), so a root read can fail mid-gather.
+    Retrying converges to the exact total — the interrupted gather
+    never perturbed state."""
+    from repro.core.sharded import ShardedTableBackend
+    inner = ShardedTableBackend(500, n_domains=16)
+    plan = FaultPlan(seed=3, p_transient=0.4, ops=("reconcile",))
+    injector = FaultyBackend(inner, plan)
+
+    def hook(shard):
+        # draw once per reconcile (shard 0) so the seeded schedule is
+        # identical whatever the device count
+        if shard == 0 and injector._pre_fault("reconcile"):
+            raise TransientBackendError(
+                f"injected between shard gathers (shard {shard})")
+
+    inner.reconcile_hook = hook
+    cg = AgentCgroup(injector)
+    cg.mkdir("/t0")
+    cg.mkdir("/t1")
+    assert cg.try_charge("/t0", 40).granted
+    assert cg.try_charge("/t1", 25).granted
+    fired, total = 0, None
+    for _ in range(32):
+        try:
+            total = cg.usage("/")
+            break
+        except TransientBackendError:
+            fired += 1
+    assert total == 65
+    assert fired > 0                     # the seam actually fired (seeded)
+    inner.reconcile_hook = None
+    assert cg.usage("/") == 65
+
+
+def test_sharded_reconcile_concurrent_lifecycle_op():
+    """A lifecycle op landing between shard gathers (the async-daemon
+    interleaving) leaves accounting consistent: the mid-reconciliation
+    read sees the pre- or post-op total (never garbage), and a clean
+    re-read returns the exact post-op value."""
+    from repro.core.sharded import ShardedTableBackend
+    inner = ShardedTableBackend(500, n_domains=16)
+    cg = AgentCgroup(inner)
+    cg.mkdir("/t0")
+    assert cg.try_charge("/t0", 60).granted
+    fired = []
+
+    def hook(shard):
+        if not fired:                    # one-shot: lands mid-gather once
+            fired.append(shard)
+            inner.uncharge("/t0", 10)
+
+    inner.reconcile_hook = hook
+    mid = cg.usage("/")
+    assert mid in (50, 60)
+    inner.reconcile_hook = None
+    assert fired and cg.usage("/") == 50
+    assert cg.usage("/t0") == 50
+
+
+def test_replay_over_faulty_backend_bit_identical():
+    """The whole §6 trace-replay simulation driven over a FaultyBackend
+    (``Replay(..., backend=...)``) with a transient-only plan and
+    auto-retry: every injected transient self-heals before the op
+    applies, so the full result — survival, latencies, peaks, per-task
+    outcomes — is bit-identical to the default run."""
+    from repro.core.policy import AgentCgroupPolicy
+    from repro.traces.generator import named_trace
+    from repro.traces.replay import Replay, ReplayConfig
+
+    def results(backend=None):
+        tr = [named_trace("dask/dask#11628", seed=1),
+              named_trace("sigmavirus24/github3.py#673", seed=2)]
+        r = Replay(tr, [D.HIGH, D.LOW], AgentCgroupPolicy(),
+                   ReplayConfig(capacity_mb=1100), backend=backend).run()
+        hi = r.latency_of(D.HIGH)
+        return (r.survival, r.throttle_count, r.peak_pool_mb,
+                hi.p50, hi.p95,
+                {k: (v.completed, v.killed, v.finish_ms)
+                 for k, v in r.tasks.items()})
+
+    want = results()
+    plan = FaultPlan(seed=11, p_transient=0.2)
+    faulty = FaultyBackend(HostTreeBackend(1100), plan, auto_retry=1)
+    assert results(faulty) == want
+    assert any(f == "transient" for _, _, f, _ in faulty.injected)
+
+
 # -------------------------------------------------------------- chaos fuzz
 
 

@@ -203,6 +203,64 @@ def test_update_params_parity_under_fuzz(op_list):
         assert dev.peak(path) == host.peak(path), path
 
 
+# ----------------------- weighted scheduler fuzz (cpu.weight rewrites)
+
+
+def _mk_sched_cg(kind: str) -> AgentCgroup:
+    from repro.core.sched import WeightedFairProgram
+    from repro.testing.conformance import standard_backend_factory
+    cg = AgentCgroup(standard_backend_factory(kind)(500, 16))
+    cg.attach("/", WeightedFairProgram(base_delay_ms=0.0, max_delay_ms=0.0))
+    cg.mkdir("/t")
+    cg.mkdir("/t/a", DomainSpec(weight=300))
+    cg.mkdir("/t/b", DomainSpec(weight=100, priority=D.LOW))
+    cg.mkdir("/t/a/tool")
+    return cg
+
+
+sched_ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("round"), st.integers(min_value=1, max_value=4)),
+        st.tuples(st.just("weight"), st.sampled_from(PATHS),
+                  st.integers(min_value=1, max_value=10000)),
+        st.tuples(st.just("boost"), st.sampled_from(PATHS + ["/"]),
+                  st.integers(min_value=-3, max_value=3)),
+        st.tuples(st.just("freeze"), st.sampled_from(PATHS)),
+        st.tuples(st.just("thaw"), st.sampled_from(PATHS)),
+    ),
+    min_size=1, max_size=40)
+
+
+@given(sched_ops)
+@settings(max_examples=40, deadline=None)
+def test_schedule_parity_under_weight_fuzz(op_list):
+    """Interleave scheduling rounds with random live ``cpu.weight``
+    rewrites, ``sched_boost`` retunes and freeze/thaw flips: host and
+    device must emit bit-identical advance sets every round — the same
+    flattened weights and the same vruntime accounts."""
+    host, dev = _mk_sched_cg("host"), _mk_sched_cg("device")
+    costs = [1] * len(PATHS)
+    step = 0
+    for op in op_list:
+        if op[0] == "round":
+            want = host.schedule(PATHS, costs, step, op[1])
+            got = dev.schedule(PATHS, costs, step, op[1])
+            assert got == want, (step, op)
+            step += 1
+        elif op[0] == "weight":
+            host.write(op[1], "cpu.weight", op[2])
+            dev.write(op[1], "cpu.weight", op[2])
+        elif op[0] == "boost":
+            host.update_params(op[1], sched_boost=float(op[2]))
+            dev.update_params(op[1], sched_boost=float(op[2]))
+        elif op[0] == "freeze":
+            host.freeze(op[1])
+            dev.freeze(op[1])
+        else:
+            host.thaw(op[1])
+            dev.thaw(op[1])
+
+
 # ------------------------------ async daemon vs inner backend (stateful)
 
 
