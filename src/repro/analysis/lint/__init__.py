@@ -1,0 +1,55 @@
+"""tracelint — a verifier-style invariant linter for the control plane.
+
+The paper's in-kernel enforcement story only works because the kernel
+*verifier* statically rejects unsafe eBPF programs before they load:
+the one decision path that runs at the memcg charge point is proven
+safe ahead of time, not discovered unsafe at runtime.  This repo's
+analogue of that guarantee is a set of load-bearing invariants that
+until now were only enforced dynamically (conformance parity suites,
+hypothesis fuzzing) — late and probabilistically:
+
+  * one decision path: host replay, the jitted engine, and the sharded
+    ``shard_map`` kernels all trace the same ``charge_decision`` /
+    ``schedule_decision`` (no python control flow forking the trace);
+  * zero-retrace retunes: live parameter writes must not bake python
+    scalars into jit caches;
+  * bit-stable replay: nothing on the record/replay path may read
+    wall clocks or unseeded entropy;
+  * lock discipline: async-daemon readers only observe whole epochs;
+  * protocol stability: every backend speaks the exact ``Backend``
+    vocabulary;
+  * pytree-structure stability: control-state dicts never grow keys
+    conditionally (a structure change is a silent retrace).
+
+``tracelint`` is the static pass that checks them: pure-stdlib AST
+analysis (no jax import — it runs anywhere), per-rule ``Finding``s
+with file:line, ``# tracelint: disable=<rule> -- why`` suppressions,
+text/JSON reporters, and a checked-in baseline for grandfathered
+findings.  Run it as::
+
+    python -m repro.analysis.lint src --baseline tracelint-baseline.json
+
+Rules
+-----
+TL001  trace-purity       python control flow / host casts / numpy in
+                          traced decision scopes
+TL002  retrace-hazard     python scalars closed over inside jitted
+                          callables (jit-cache explosion)
+TL003  replay-determinism wall clocks & unseeded entropy in
+                          core/ traces/ testing/
+TL004  lock-discipline    inner-backend access outside the apply lock
+TL005  protocol-drift     backend classes vs the ``Backend`` protocol
+TL006  pytree-stability   conditionally-created control-state dict keys
+"""
+from repro.analysis.lint.baseline import (apply_baseline, load_baseline,
+                                          write_baseline)
+from repro.analysis.lint.core import (Finding, LintError, Rule, lint_paths,
+                                      lint_sources)
+from repro.analysis.lint.report import render_json, render_text
+from repro.analysis.lint.rules import ALL_RULES, rules_by_id
+
+__all__ = [
+    "Finding", "LintError", "Rule", "lint_paths", "lint_sources",
+    "ALL_RULES", "rules_by_id", "load_baseline", "write_baseline",
+    "apply_baseline", "render_text", "render_json",
+]

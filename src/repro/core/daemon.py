@@ -322,20 +322,17 @@ class AsyncDaemonBackend:
 
     @property
     def log(self) -> EventLog:
-        self.flush()
-        return self.inner.log
+        return self._observe(lambda: self.inner.log)
 
     @property
     def prog(self) -> PolicyProgram:
-        self.flush()
-        return self.inner.prog
+        return self._observe(lambda: self.inner.prog)
 
     def device_view(self):
         """The INNER backend's jit-safe view: in-step enforcement never
         goes through the queue (the daemon only mutates between epochs,
         which the engine aligns with step boundaries)."""
-        self.flush()
-        return self.inner.device_view()
+        return self._observe(lambda: self.inner.device_view())
 
     def __getattr__(self, name: str):
         # backend-specific read-only extras (placement, index, tree,

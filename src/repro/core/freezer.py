@@ -8,7 +8,6 @@ and termination: unlike an OOM kill, the LLM context survives.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
@@ -22,7 +21,8 @@ class FrozenEntry:
     blobs: Any                   # host pytree (numpy)
     pages: int                   # pages the session held when frozen
     meta: dict
-    frozen_at: float
+    frozen_at: float             # caller's step clock, never wall time:
+                                 # records must be replay-deterministic
 
 
 class FrozenStore:
@@ -35,13 +35,14 @@ class FrozenStore:
         self.bytes_held = 0
 
     def freeze(self, session_id: str, device_tree: Any, *, pages: int,
-               meta: Optional[dict] = None) -> None:
-        """Offload a pytree of device arrays to host memory."""
+               meta: Optional[dict] = None, now: float = 0.0) -> None:
+        """Offload a pytree of device arrays to host memory.  ``now``
+        is the caller's logical clock (engine step number)."""
         assert session_id not in self._entries, session_id
         host = jax.tree.map(lambda x: np.asarray(x), device_tree)
         nbytes = sum(x.nbytes for x in jax.tree.leaves(host))
         self._entries[session_id] = FrozenEntry(
-            session_id, host, pages, meta or {}, time.time())
+            session_id, host, pages, meta or {}, float(now))
         self.n_freezes += 1
         self.bytes_held += nbytes
 

@@ -355,7 +355,8 @@ class Engine:
         if s.sid in self._lease:
             self._lease.pop(s.sid).close()     # residual moves to session
         self.caches.freeze_slot(s.sid, s.slot, pages=s.pages,
-                                meta={"length": s.length})
+                                meta={"length": s.length},
+                                now=self.step_no)
         self.slot_session[s.slot] = None
         # release pages (offloaded to host) + freeze the domain
         self.cg.uncharge(s.domain, s.pages)

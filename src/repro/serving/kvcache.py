@@ -72,10 +72,10 @@ class SlotCaches:
     # ----------------------------------------------------- freeze / thaw
 
     def freeze_slot(self, session_id: str, slot: int, *, pages: int,
-                    meta: Optional[dict] = None) -> None:
+                    meta: Optional[dict] = None, now: float = 0.0) -> None:
         """Offload one slot's state to host memory and recycle the slot."""
         blob = jax.tree.map(lambda x: np.asarray(x[:, slot]), self.state)
-        self.store.freeze(session_id, blob, pages=pages, meta=meta)
+        self.store.freeze(session_id, blob, pages=pages, meta=meta, now=now)
         self.free_slot(slot)
 
     def thaw_slot(self, session_id: str) -> tuple[int, dict]:

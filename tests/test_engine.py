@@ -102,6 +102,35 @@ def test_session_completion_lengths(model):
         assert s.length == want, (s.sid, s.length, want)
 
 
+def test_freezer_records_deterministic(model, monkeypatch):
+    """Two identical runs produce identical freezer records — the
+    TL003 regression: offload records carry the step clock, never wall
+    time, so freeze/thaw state is replay-deterministic."""
+    from repro.core.freezer import FrozenStore
+
+    def capture(records):
+        orig = FrozenStore.freeze
+
+        def freeze(self, sid, tree, *, pages, meta=None, now=0.0):
+            records.append((sid, pages, dict(meta or {}), float(now)))
+            return orig(self, sid, tree, pages=pages, meta=meta, now=now)
+
+        return freeze
+
+    runs = []
+    for _ in range(2):
+        records = []
+        monkeypatch.setattr(FrozenStore, "freeze", capture(records))
+        run_mode(model, "inkernel", use_freeze=True,
+                 session_high={"lo1": 12, "lo2": 12})
+        monkeypatch.undo()
+        runs.append(records)
+    assert runs[0], "scenario no longer freezes anything"
+    assert runs[0] == runs[1]
+    for _sid, _pages, _meta, now in runs[0]:
+        assert now == int(now) >= 0      # a step number, not an epoch time
+
+
 def test_feedback_shrinks_append(model):
     """Against a tiny pool, sessions reconstruct strategy (shorter tool
     results) after feedback instead of being evicted."""

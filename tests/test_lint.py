@@ -1,0 +1,529 @@
+"""tracelint: per-rule fixtures (each rule must flag its seeded
+violation and pass its clean twin), suppression + baseline round-trip,
+JSON reporter schema, and the self-run certifying src/ clean — the
+static half of the conformance story, registered in tier-1 so every PR
+is verified against the same invariants the parity suites certify
+dynamically."""
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.lint import (apply_baseline, lint_paths, lint_sources,
+                                 load_baseline, render_json, render_text,
+                                 rules_by_id, write_baseline)
+from repro.analysis.lint.cli import main as cli_main
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def lint(path, src, **more):
+    sources = {path: textwrap.dedent(src)}
+    for p, s in more.items():
+        sources[p] = textwrap.dedent(s)
+    return lint_sources(sources)
+
+
+def rules_fired(findings):
+    return {f.rule for f in findings}
+
+
+# --------------------------------------------------------------- TL001
+
+
+def test_tl001_flags_python_branch_in_decision_module():
+    findings = lint("core/progs.py", """\
+        def charge_decision(prog, view, req):
+            if view.usage > view.high:
+                return 1
+            return 0
+        """)
+    assert rules_fired(findings) == {"TL001"}
+    assert "forks the one decision path" in findings[0].message
+
+
+def test_tl001_flags_item_cast_numpy_assert_in_program_hooks():
+    findings = lint("serving/myprog.py", """\
+        class MyProg(PolicyProgram):
+            def on_charge(self, view, req, params):
+                assert req.pages > 0
+                usage = view.usage.item()
+                cap = float(view.high)
+                return np.minimum(usage, cap)
+        """)
+    msgs = [f.message for f in findings]
+    assert all(f.rule == "TL001" for f in findings)
+    assert any("assert" in m for m in msgs)
+    assert any(".item()" in m for m in msgs)
+    assert any("float()" in m for m in msgs)
+    assert any("np.minimum" in m for m in msgs)
+
+
+def test_tl001_flags_host_sync_anywhere_in_decision_module():
+    findings = lint("core/sched.py", """\
+        def helper(x):
+            return jax.block_until_ready(x)
+        """)
+    assert "TL001" in rules_fired(findings)
+
+
+def test_tl001_clean_twin():
+    findings = lint("core/progs.py", """\
+        def charge_decision(prog, view, req):
+            grant = jnp.where(view.usage > view.high, 0, 1)
+            return grant
+
+        class GraduatedThrottleProgram:
+            def delay_ms(self, view, params, priority=None):
+                if priority is None:          # static dispatch, not traced
+                    priority = params[0]
+                return jnp.maximum(priority, 0.0)
+
+        def host_helper(tree):
+            # not a traced entry point: host-side numpy is fine here
+            return np.asarray(tree)
+        """)
+    assert findings == []
+
+
+# --------------------------------------------------------------- TL002
+
+
+def test_tl002_flags_scalar_closure():
+    findings = lint("core/build.py", """\
+        import jax
+
+        class Builder:
+            def make(self):
+                scale = 2.0
+                return jax.jit(lambda v: v * scale)
+        """)
+    assert rules_fired(findings) == {"TL002"}
+    assert "'scale'" in findings[0].message
+
+
+def test_tl002_flags_loop_variable_closure():
+    findings = lint("core/build.py", """\
+        import jax
+
+        def build():
+            fns = []
+            for k in range(3):
+                fns.append(jax.jit(lambda v: v + k))
+            return fns
+        """)
+    assert rules_fired(findings) == {"TL002"}
+    assert "loop variable" in findings[0].message
+
+
+def test_tl002_clean_twin():
+    findings = lint("core/build.py", """\
+        import jax
+
+        def module_fn(v):
+            return v * 2.0
+
+        jit_module = jax.jit(module_fn)   # module level: no python frame
+
+        class Builder:
+            def make(self):
+                prog = self.prog          # object identity IS the code
+                return jax.jit(lambda v: prog.on_charge(v))
+
+            def make_arg(self):
+                return jax.jit(lambda v, scale: v * scale)
+        """)
+    assert findings == []
+
+
+# --------------------------------------------------------------- TL003
+
+
+def test_tl003_flags_wall_clock_and_entropy():
+    findings = lint("core/rec.py", """\
+        import os
+        import random
+        import time
+
+        def stamp():
+            return time.time()
+
+        def token():
+            return os.urandom(8), random.random()
+
+        def rng():
+            return np.random.default_rng(), np.random.rand(3)
+        """)
+    msgs = [f.message for f in findings]
+    assert all(f.rule == "TL003" for f in findings)
+    assert any("time.time()" in m for m in msgs)
+    assert any("os.urandom" in m for m in msgs)
+    assert any("random.random" in m for m in msgs)
+    assert any("without a seed" in m for m in msgs)
+    assert any("np.random.rand" in m for m in msgs)
+
+
+def test_tl003_flags_import_forms():
+    findings = lint("testing/mk.py", """\
+        from time import time
+        from random import randint
+        """)
+    assert len(findings) == 2
+    assert rules_fired(findings) == {"TL003"}
+
+
+def test_tl003_clean_twin_and_allowlist():
+    assert lint("core/wait.py", """\
+        import time
+
+        def wait(deadline):
+            t0 = time.monotonic()          # shapes timing, never recorded
+            time.sleep(0.01)
+            return time.monotonic() - t0
+
+        def rng(seed):
+            return np.random.default_rng(seed)
+        """) == []
+    # launch/ and benchmarks/ are outside the replay path
+    assert lint("launch/run.py", """\
+        import time
+
+        def banner():
+            return time.time()
+        """) == []
+
+
+# --------------------------------------------------------------- TL004
+
+
+def test_tl004_flags_unlocked_inner_access():
+    findings = lint("core/daemon.py", """\
+        import threading
+
+        class AsyncBackend:
+            def __init__(self, inner):
+                self.inner = inner
+                self._apply_lock = threading.Lock()
+
+            def peek(self):
+                return self.inner.log
+        """)
+    assert rules_fired(findings) == {"TL004"}
+    assert "epoch mid-application" in findings[0].message
+
+
+def test_tl004_clean_twin():
+    findings = lint("core/daemon.py", """\
+        import threading
+
+        class AsyncBackend:
+            def __init__(self, inner):
+                self.inner = inner
+                self._apply_lock = threading.Lock()
+
+            def _observe(self, fn):
+                with self._apply_lock:
+                    return fn()
+
+            def locked(self):
+                with self._apply_lock:
+                    return self.inner.log
+
+            def via_lambda(self):
+                return self._observe(lambda: self.inner.log)
+
+            def via_local_def(self):
+                def take():
+                    return self.inner.snapshot()
+                return self._observe(take)
+
+        class SyncWrapper:
+            # no _apply_lock: single-writer wrapper, rule does not bind
+            def __init__(self, inner):
+                self._inner = inner
+
+            def read(self):
+                return self._inner.read()
+        """)
+    assert findings == []
+
+
+# --------------------------------------------------------------- TL005
+
+
+PROTO = """\
+    from typing import Protocol
+
+    class Backend(Protocol):
+        log: int
+
+        def read(self, path, file): ...
+        def write(self, path, file, value): ...
+    """
+
+
+def test_tl005_flags_missing_method_and_signature_drift():
+    findings = lint("core/cgroup.py", PROTO, **{"core/bad.py": """\
+        class BadBackend:
+            def __init__(self):
+                self.log = 0
+
+            def read(self, path): ...
+        """})
+    msgs = [f.message for f in findings]
+    assert all(f.rule == "TL005" for f in findings)
+    assert any("missing Backend method 'write" in m for m in msgs)
+    assert any("drifts from the Backend protocol" in m for m in msgs)
+
+
+def test_tl005_flags_unsanctioned_surface_and_missing_attr():
+    findings = lint("core/cgroup.py", PROTO, **{"core/extra.py": """\
+        class ExtraBackend:
+            def __init__(self):
+                pass
+
+            def read(self, path, file): ...
+            def write(self, path, file, value): ...
+            def frobnicate(self): ...
+        """})
+    msgs = [f.message for f in findings]
+    assert any("frobnicate is not in the Backend protocol" in m
+               for m in msgs)
+    assert any("does not provide Backend attribute 'log'" in m
+               for m in msgs)
+
+
+def test_tl005_clean_twin_and_getattr_passthrough():
+    findings = lint("core/cgroup.py", PROTO, **{"core/good.py": """\
+        class GoodBackend:
+            def __init__(self):
+                self.log = 0
+
+            def read(self, path, file): ...
+            def write(self, path, file, value): ...
+            def device_view(self): ...
+
+        class WrapBackend:
+            def __init__(self, inner):
+                self._inner = inner
+
+            def __getattr__(self, name):
+                return getattr(self._inner, name)
+        """})
+    assert findings == []
+
+
+# --------------------------------------------------------------- TL006
+
+
+def test_tl006_flags_conditional_key():
+    findings = lint("core/state.py", """\
+        def new_state(flag):
+            st = {"usage": 0}
+            if flag:
+                st["max"] = 1
+            return st
+        """)
+    assert rules_fired(findings) == {"TL006"}
+    assert "'max'" in findings[0].message
+
+
+def test_tl006_clean_twin():
+    findings = lint("core/state.py", """\
+        def new_state(flag):
+            st = {"usage": 0}
+            st["max"] = 1                  # unconditional: stable shape
+            st["usage"] = 2 if flag else 0  # value change, not structure
+            return st
+
+        def restore(t, snap):
+            st = dict(t.state)             # copy: shape is t's concern
+            for key in ("usage", "peak"):
+                if key in snap:
+                    st[key] = snap[key]
+            return st
+        """)
+    assert findings == []
+
+
+# --------------------------------------------- suppressions / meta rule
+
+
+def test_suppression_with_justification_covers_finding():
+    findings = lint("core/clock.py", """\
+        import time
+
+        def stamp():
+            return time.time()  # tracelint: disable=TL003 -- fixture clock
+        """)
+    assert findings == []
+
+
+def test_own_line_suppression_covers_next_line():
+    findings = lint("core/clock.py", """\
+        import time
+
+        def stamp():
+            # tracelint: disable=TL003 -- fixture clock
+            return time.time()
+        """)
+    assert findings == []
+
+
+def test_suppression_without_justification_is_flagged():
+    findings = lint("core/clock.py", """\
+        import time
+
+        def stamp():
+            return time.time()  # tracelint: disable=TL003
+        """)
+    assert rules_fired(findings) == {"TL000"}
+    assert "without justification" in findings[0].message
+
+
+def test_suppression_in_decision_module_is_flagged():
+    findings = lint("core/sched.py", """\
+        import time
+
+        def helper():
+            return time.time()  # tracelint: disable=TL003 -- nope
+        """)
+    assert any(f.rule == "TL000"
+               and "decision-path module" in f.message for f in findings)
+
+
+def test_unknown_rule_in_pragma_is_flagged():
+    findings = lint("core/clock.py", """\
+        x = 1  # tracelint: disable=TL999 -- no such rule
+        """)
+    assert rules_fired(findings) == {"TL000"}
+    assert "TL999" in findings[0].message
+
+
+def test_file_level_suppression():
+    findings = lint("core/clock.py", """\
+        # tracelint: disable-file=TL003 -- whole-file fixture exemption
+        import time
+
+        def stamp():
+            return time.time()
+
+        def stamp2():
+            return time.time()
+        """)
+    assert findings == []
+
+
+# ----------------------------------------------------- baseline / report
+
+
+BAD_CORE = """\
+    import time
+
+    def stamp():
+        return time.time()
+    """
+
+
+def test_baseline_round_trip(tmp_path):
+    findings = lint("core/rec.py", BAD_CORE)
+    assert findings
+    bpath = tmp_path / "baseline.json"
+    write_baseline(str(bpath), findings)
+    fps = load_baseline(str(bpath))
+    kept, grandfathered = apply_baseline(findings, fps)
+    assert kept == [] and grandfathered == len(findings)
+    # a new finding is NOT covered
+    more = lint("core/rec.py", BAD_CORE + "\n\ndef t2():\n"
+                "    return time.time()\n")
+    kept, _ = apply_baseline(more, fps)
+    assert len(kept) == 1
+
+
+def test_json_report_schema():
+    findings = lint("core/rec.py", BAD_CORE)
+    payload = json.loads(render_json(findings, suppressed_by_baseline=2))
+    assert payload["version"] == 1
+    assert payload["total"] == len(findings) > 0
+    assert payload["suppressed_by_baseline"] == 2
+    assert payload["counts"] == {"TL003": len(findings)}
+    for f in payload["findings"]:
+        assert set(f) == {"rule", "path", "line", "col", "message"}
+    assert "no findings" in render_text([])
+
+
+def test_syntax_error_is_a_finding_not_a_crash():
+    findings = lint_sources({"core/broken.py": "def f(:\n"})
+    assert findings and findings[0].rule == "TL000"
+    assert "syntax error" in findings[0].message
+
+
+# ---------------------------------------------------------- CLI + self-run
+
+
+def test_cli_exit_codes_and_select(tmp_path, capsys):
+    bad = tmp_path / "core" / "rec.py"
+    bad.parent.mkdir()
+    bad.write_text(textwrap.dedent(BAD_CORE), encoding="utf-8")
+    assert cli_main([str(tmp_path)]) == 1
+    out = capsys.readouterr().out
+    assert "TL003" in out and "time.time()" in out
+    # selecting an unrelated rule: clean
+    assert cli_main([str(tmp_path), "--select", "TL004"]) == 0
+    capsys.readouterr()
+    assert cli_main([str(tmp_path), "--select", "TL042"]) == 2
+    assert cli_main(["--list-rules"]) == 0
+    assert cli_main([str(tmp_path / "nope.txt")]) == 2
+
+
+def test_cli_json_and_write_baseline(tmp_path, capsys):
+    bad = tmp_path / "core" / "rec.py"
+    bad.parent.mkdir()
+    bad.write_text(textwrap.dedent(BAD_CORE), encoding="utf-8")
+    assert cli_main([str(tmp_path), "--json"]) == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["total"] == 1
+    bpath = tmp_path / "baseline.json"
+    assert cli_main([str(tmp_path), "--write-baseline", str(bpath)]) == 0
+    capsys.readouterr()
+    assert cli_main([str(tmp_path), "--baseline", str(bpath)]) == 0
+    assert "grandfathered" in capsys.readouterr().out
+    assert cli_main([str(tmp_path), "--baseline",
+                     str(tmp_path / "missing.json")]) == 2
+
+
+def test_every_rule_has_id_name_description():
+    by_id = rules_by_id()
+    assert set(by_id) == {"TL001", "TL002", "TL003", "TL004", "TL005",
+                          "TL006"}
+    for r in by_id.values():
+        assert r.name and r.description
+
+
+# The self-run: the acceptance invariant, registered in tier-1 so every
+# future PR is linted locally and in CI alike.
+
+
+def test_selfrun_core_is_finding_free():
+    findings = lint_paths([str(REPO / "src" / "repro" / "core")])
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_selfrun_full_src_exits_clean():
+    rc = cli_main([str(REPO / "src"),
+                   "--baseline", str(REPO / "tracelint-baseline.json")])
+    assert rc == 0
+
+
+def test_selfrun_decision_modules_have_zero_suppressions():
+    # the acceptance criterion verbatim: no pragmas at all in the
+    # decision-path modules, not even justified ones
+    for mod in ("progs.py", "sched.py", "controller.py"):
+        text = (REPO / "src" / "repro" / "core" / mod).read_text()
+        assert "tracelint:" not in text, mod
+
+
+def test_checked_in_baseline_is_empty():
+    fps = load_baseline(str(REPO / "tracelint-baseline.json"))
+    assert fps == frozenset()
