@@ -4,6 +4,7 @@
   mismatch           §4 Table 2 (granularity/responsiveness/adaptability)
   fig8_replay        §6 Fig 8 (trace replay: survival + P95 latency)
   escalation_waste   §6 semantic OOM escalation (retry completion + waste)
+  adaptive_pressure  §4/§5 PSI-driven soft-limit retuner vs static limits
   engine_fig8        beyond-paper: Fig 8 on the live serving engine
   multitenant_isolation  cpu.weight proportional share vs uniform gate
   throttle_precision §6 kernel-selftest analogue (2000 ms +/- 2.3%)
@@ -18,7 +19,7 @@ import time
 
 def main() -> None:
     t0 = time.time()
-    from benchmarks import (characterization, engine_fig8,
+    from benchmarks import (adaptive_pressure, characterization, engine_fig8,
                             engine_overhead, escalation_waste, fig8_replay,
                             mismatch, multitenant_isolation,
                             throttle_precision)
@@ -26,6 +27,7 @@ def main() -> None:
     mismatch.run()
     fig8_replay.run()
     escalation_waste.run(n=4)
+    adaptive_pressure.run(n=4)
     engine_fig8.run()
     engine_overhead.run()
     multitenant_isolation.run()

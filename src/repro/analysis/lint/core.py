@@ -23,7 +23,8 @@ PRAGMA_RE = re.compile(
 
 # modules whose decision code must stay suppression-free: these are the
 # one-decision-path files every substrate traces (acceptance invariant)
-DECISION_MODULES = ("core/progs.py", "core/sched.py", "core/controller.py")
+DECISION_MODULES = ("core/progs.py", "core/sched.py", "core/controller.py",
+                    "core/pressure.py")
 
 META_RULE = "TL000"          # framework findings about suppressions
 

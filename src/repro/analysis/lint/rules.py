@@ -32,6 +32,7 @@ TRACED_HOOKS = frozenset({"on_charge", "on_over_high", "on_gate",
 TRACED_FUNCS = frozenset({
     "charge_decision", "schedule_decision", "charge_batch", "slot_gate",
     "uncharge_batch", "_chain_view", "_ancestor_chain",
+    "charge_stall_event", "sched_stall_events",
 })
 
 
@@ -494,6 +495,7 @@ class ProtocolDrift(Rule):
     EXTENSIONS = frozenset({
         "device_view", "restore", "flush", "barrier", "close",
         "throttle_delay_ms", "reconcile", "unwedge", "placement",
+        "offload_fault",
     })
 
     def check_project(self, ctxs) -> list:

@@ -55,6 +55,7 @@ from typing import Optional, Protocol, Union, runtime_checkable
 import numpy as np
 
 from repro.core import domains as D
+from repro.core import pressure as P
 from repro.core.events import Ev, EventLog, OomEvent
 from repro.core.intent import Feedback, Hint, hint_to_high, make_feedback
 from repro.core.progs import (ChainView, PolicyProgram, Request, as_program,
@@ -62,10 +63,15 @@ from repro.core.progs import (ChainView, PolicyProgram, Request, as_program,
 
 UNLIMITED = D.UNLIMITED
 
-# readable / writable control files (the cgroupfs surface)
+# readable / writable control files (the cgroupfs surface);
+# memory.pressure / cpu.pressure are PSI strings computed by the facade
+# from the backends' raw subtree stall counters (memory.stall /
+# cpu.stall — see core/pressure.py)
 _READ_FILES = ("memory.current", "memory.peak", "memory.high", "memory.max",
                "memory.low", "memory.priority", "memory.events",
-               "cgroup.freeze", "cpu.weight", "cpu.max")
+               "cgroup.freeze", "cpu.weight", "cpu.max",
+               "memory.pressure", "cpu.pressure",
+               "memory.stall", "cpu.stall")
 _WRITE_FILES = ("memory.high", "memory.max", "memory.low", "memory.priority",
                 "cgroup.freeze", "cpu.weight", "cpu.max")
 
@@ -282,6 +288,10 @@ class HostTreeBackend:
                       jnp.int32(clock) if step_mode else jnp.float32(clock))
         verdict, delay_ms, throttle = self._decide_fn()(view, req)
         self._rows[path] = np.array(verdict.params)     # writable copy
+        # PSI accounting — the same event formula charge_batch scatters
+        # on device: a stalled or throttled decision stalls the domain
+        if bool(verdict.stall) or bool(throttle):
+            d.mem_stall += 1
 
         # ``delay_ms`` on the ticket = the throttle window now pending on
         # the charged domain, in ms — the device backends' convention
@@ -365,6 +375,8 @@ class HostTreeBackend:
             "cpu_used": jnp.asarray([d.cpu_used for d in doms], jnp.int32),
             "cpu_stamp": jnp.asarray([d.cpu_stamp for d in doms],
                                      jnp.int32),
+            "cpu_stall": jnp.asarray([d.cpu_stall for d in doms],
+                                     jnp.int32),
         }
         dom = jnp.asarray([row[p] for p in paths], jnp.int32)
         cost = jnp.asarray(list(costs), jnp.int32)
@@ -373,10 +385,12 @@ class HostTreeBackend:
         vr = np.asarray(st["vruntime"])
         used = np.asarray(st["cpu_used"])
         stamp = np.asarray(st["cpu_stamp"])
+        stall = np.asarray(st["cpu_stall"])
         for i, d in enumerate(doms):
             d.vruntime = float(vr[i])
             d.cpu_used = int(used[i])
             d.cpu_stamp = int(stamp[i])
+            d.cpu_stall = int(stall[i])
         return [bool(a) for a in np.asarray(advance)]
 
     # subtree control
@@ -413,6 +427,11 @@ class HostTreeBackend:
         if file == "memory.events":
             return {"high": d.n_high_breach, "max": d.n_max_breach,
                     "throttle": d.n_throttle, "oom_kill": d.n_oom_kill}
+        if file in P.STALL_FILES:
+            attr = "mem_stall" if file == "memory.stall" else "cpu_stall"
+            return P.subtree_counts_by_path(
+                {n.name: getattr(n, attr)
+                 for n in self.tree.subtree(path)})[path]
         raise KeyError(file)
 
     def write(self, path: str, file: str, value) -> None:
@@ -470,6 +489,10 @@ class HostTreeBackend:
                                      np.int64),
                 "cpu_stamp": np.array([idx[p].cpu_stamp for p in order],
                                       np.int64),
+                "mem_stall": np.array([idx[p].mem_stall for p in order],
+                                      np.int64),
+                "cpu_stall": np.array([idx[p].cpu_stall for p in order],
+                                      np.int64),
                 "root_usage": self.tree.root.usage}
 
     def restore(self, snap: dict) -> None:
@@ -503,6 +526,9 @@ class HostTreeBackend:
                 d.vruntime = float(snap["vruntime"][i])
                 d.cpu_used = int(snap["cpu_used"][i])
                 d.cpu_stamp = int(snap["cpu_stamp"][i])
+            if "mem_stall" in snap:       # older snapshots: counters stay 0
+                d.mem_stall = int(snap["mem_stall"][i])
+                d.cpu_stall = int(snap["cpu_stall"][i])
             self._rows[p] = np.asarray(snap["params"][i]).copy()
         self._recompute_flat()
 
@@ -748,6 +774,12 @@ class DeviceTableBackend:
             return {"high": 0, "max": 0,
                     "throttle": int(int(st["throttle_until"][idx]) > 0),
                     "oom_kill": 0}
+        if file in P.STALL_FILES:
+            key = "mem_stall" if file == "memory.stall" else "cpu_stall"
+            col = np.asarray(self.table.state[key])
+            return P.subtree_counts_by_path(
+                {p: int(col[i]) for p, i in self.table.index.items()
+                 if path_in_scope(path, p)})[path]
         idx = self.table.index[path]
         return int(self.table.state[self._FILE_KEY[file]][idx])
 
@@ -787,6 +819,8 @@ class DeviceTableBackend:
                 "vruntime": np.asarray(st["vruntime"]),
                 "cpu_used": np.asarray(st["cpu_used"]),
                 "cpu_stamp": np.asarray(st["cpu_stamp"]),
+                "mem_stall": np.asarray(st["mem_stall"]),
+                "cpu_stall": np.asarray(st["cpu_stall"]),
                 "root_usage": int(st["usage"][0])}
 
     def restore(self, snap: dict) -> None:
@@ -818,7 +852,9 @@ class DeviceTableBackend:
                 ("flat_weight", "flat_weight", jnp.float32),
                 ("vruntime", "vruntime", jnp.float32),
                 ("cpu_used", "cpu_used", jnp.int32),
-                ("cpu_stamp", "cpu_stamp", jnp.int32)):
+                ("cpu_stamp", "cpu_stamp", jnp.int32),
+                ("mem_stall", "mem_stall", jnp.int32),
+                ("cpu_stall", "cpu_stall", jnp.int32)):
             if src in snap:
                 st[key] = jnp.asarray(np.asarray(snap[src]), dtype)
         t.state = st
@@ -1001,6 +1037,11 @@ class AgentCgroup:
         self.backend = backend
         self.intent = IntentChannel(self)
         self._now = 0.0
+        # PSI averaging over the backends' raw stall counters; decay
+        # runs on the facade clock (set_time) — one meter per facade,
+        # so identical op sequences render identical pressure strings
+        # on every backend kind
+        self._pressure = P.PressureMeter()
 
     # ------------------------------------------------------------ lifecycle
 
@@ -1017,6 +1058,7 @@ class AgentCgroup:
         """Remove a leaf domain.  By default residual charges transfer
         to the parent (pages outliving the tool call stay accounted to
         the session); with ``transfer_residual=False`` they release."""
+        self._pressure.forget(path)
         return self.backend.rmdir(path, transfer_residual)
 
     def exists(self, path: str) -> bool:
@@ -1059,11 +1101,29 @@ class AgentCgroup:
 
     def read(self, path: str, file: str):
         assert file in _READ_FILES, file
+        if file in P.PRESSURE_FILES:
+            total = int(self.backend.read(path, P.STALL_OF[file]))
+            if self._pressure.auto_step:    # ms clock: track the program
+                self._pressure.step_ms = float(self.backend.prog.step_ms)
+            return self._pressure.read(path, file, total, self._now)
         return self.backend.read(path, file)
 
     def write(self, path: str, file: str, value) -> None:
         assert file in _WRITE_FILES, file
         self.backend.write(path, file, value)
+
+    def pressure_clock(self, *, step_quantum: Optional[float] = None,
+                       windows: Optional[tuple] = None) -> None:
+        """Reconfigure the PSI meter: a caller whose ``set_time`` counts
+        steps instead of ms (the serving engine) passes
+        ``step_quantum=1.0`` and the decay windows converted to steps;
+        ``windows`` alone shortens the averaging horizon (tests,
+        fast-reacting controllers) while keeping the ms clock."""
+        if step_quantum is not None:
+            self._pressure.auto_step = False
+            self._pressure.step_ms = float(step_quantum)
+        if windows is not None:
+            self._pressure.windows = (float(windows[0]), float(windows[1]))
 
     # -------------------------------------------------------------- charging
 

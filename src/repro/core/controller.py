@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import domains as D
+from repro.core.pressure import charge_stall_event
 from repro.core.progs import (ChainView, PolicyProgram, Request, as_program,
                               charge_decision, path_in_scope)
 
@@ -83,6 +84,10 @@ def new_state(capacity_pages: int, n_domains: int = 64,
         "vruntime": jnp.zeros((n,), jnp.float32),
         "cpu_used": jnp.zeros((n,), jnp.int32),
         "cpu_stamp": jnp.full((n,), -1, jnp.int32),
+        # PSI-style stall-event counters (core/pressure.py): local to
+        # each domain, aggregated up the hierarchy host-side at read
+        "mem_stall": jnp.zeros((n,), jnp.int32),
+        "cpu_stall": jnp.zeros((n,), jnp.int32),
     }
     st["max"] = st["max"].at[0].set(capacity_pages)
     st["high"] = st["high"].at[0].set(capacity_pages)
@@ -139,7 +144,7 @@ def charge_batch(state: dict, dom: jax.Array, amt: jax.Array, step,
     prog = as_program(prog)
 
     def one(carry, req):
-        usage, peak, throttle_until, params = carry
+        usage, peak, throttle_until, params, mem_stall = carry
         d, a = req
         view = _chain_view(state, usage, throttle_until, params, d)
         verdict, delay_ms, throttle = charge_decision(
@@ -163,14 +168,22 @@ def charge_batch(state: dict, dom: jax.Array, amt: jax.Array, step,
             jnp.where(d >= 0, tu, throttle_until[di]))
         params = params.at[di].set(
             jnp.where(d >= 0, verdict.params, params[di]))
-        return (usage, peak, throttle_until, params), (grant, stalled)
+        # PSI accounting: a stalled or throttled decision is one
+        # memory-stall event on the charged domain (core/pressure.py)
+        mem_stall = mem_stall.at[di].add(
+            jnp.where(d >= 0,
+                      charge_stall_event(stalled, (d >= 0) & throttle), 0))
+        return (usage, peak, throttle_until, params, mem_stall), \
+            (grant, stalled)
 
-    (usage, peak, throttle_until, params), (granted, stalled) = jax.lax.scan(
-        one, (state["usage"], state["peak"], state["throttle_until"],
-              state["prog"]),
-        (dom.astype(jnp.int32), amt.astype(jnp.int32)))
+    (usage, peak, throttle_until, params, mem_stall), (granted, stalled) = \
+        jax.lax.scan(
+            one, (state["usage"], state["peak"], state["throttle_until"],
+                  state["prog"], state["mem_stall"]),
+            (dom.astype(jnp.int32), amt.astype(jnp.int32)))
     new_state = dict(state, usage=usage, peak=peak,
-                     throttle_until=throttle_until, prog=params)
+                     throttle_until=throttle_until, prog=params,
+                     mem_stall=mem_stall)
     return new_state, granted, stalled
 
 
@@ -307,6 +320,8 @@ class DeviceDomainTable:
             vruntime=st["vruntime"].at[idx].set(0.0),
             cpu_used=st["cpu_used"].at[idx].set(0),
             cpu_stamp=st["cpu_stamp"].at[idx].set(-1),
+            mem_stall=st["mem_stall"].at[idx].set(0),
+            cpu_stall=st["cpu_stall"].at[idx].set(0),
         )
         return idx
 
@@ -327,7 +342,9 @@ class DeviceDomainTable:
                           flat_weight=st["flat_weight"].at[idx].set(0.0),
                           vruntime=st["vruntime"].at[idx].set(0.0),
                           cpu_used=st["cpu_used"].at[idx].set(0),
-                          cpu_stamp=st["cpu_stamp"].at[idx].set(-1))
+                          cpu_stamp=st["cpu_stamp"].at[idx].set(-1),
+                          mem_stall=st["mem_stall"].at[idx].set(0),
+                          cpu_stall=st["cpu_stall"].at[idx].set(0))
         heapq.heappush(self._free, idx)
 
     def set_frozen(self, path: str, flag: bool) -> None:

@@ -76,6 +76,11 @@ class Domain:
     n_max_breach: int = 0
     n_throttle: int = 0
     n_oom_kill: int = 0
+    # PSI stall-event counters (memory.pressure / cpu.pressure, see
+    # core/pressure.py) — local to the domain; subtree aggregation
+    # happens host-side at read rate
+    mem_stall: int = 0
+    cpu_stall: int = 0
 
     def ancestors(self) -> Iterable["Domain"]:
         d: Optional[Domain] = self

@@ -13,12 +13,23 @@ faults from a seeded ``FaultPlan``:
   * daemon wedges         — the op blocks until ``unwedge()`` (or the
     wedge timeout); inside an ``AsyncDaemonBackend`` this wedges the
     daemon thread, so ``flush`` times out and poisons the backend —
-    exactly the failure the engine's rebuild path recovers from.
+    exactly the failure the engine's rebuild path recovers from;
+  * kills mid-freeze      — the kernel OOM killer fires while the
+    freezer is quiescing the subtree: the domain is killed first, then
+    the freeze applies to the dead subtree (``p_kill_mid_freeze``);
+  * offload transients    — the device->host state offload fails
+    partway (``p_offload_transient``): ``offload_fault`` plugs into
+    ``FrozenStore.offload_hook``, which raises BEFORE the entry
+    commits — never a partial frozen entry, so a retry is safe.
 
 All randomness comes from one ``numpy`` generator seeded by the plan
 and advanced a fixed four draws per intercepted op, so a given plan +
 op sequence always injects the same faults: every chaos failure is
-replayable from the plan alone (CI uploads it as an artifact).
+replayable from the plan alone (CI uploads it as an artifact).  The
+freeze/offload chaos points draw from a SEPARATE stream (seeded
+``seed ^ _CHAOS_SEED``, fixed one draw per event, only when their
+probability is nonzero) so enabling them never shifts the original
+four-draw schedule of an existing plan.
 
 The wrapper is conformance-certifiable: with the default (fault-free)
 plan it is bit-exact with its inner backend, which
@@ -48,6 +59,11 @@ class TransientBackendError(RuntimeError):
     safe (and, with ``auto_retry``, automatic)."""
 
 
+# XOR'd into the plan seed for the freeze/offload chaos stream, so the
+# new fault points never advance the original four-draw-per-op schedule
+_CHAOS_SEED = 0x5EED
+
+
 @dataclass(frozen=True)
 class FaultPlan:
     """Seeded fault schedule.  The default plan injects nothing."""
@@ -58,6 +74,9 @@ class FaultPlan:
     p_spurious_kill: float = 0.0
     p_wedge: float = 0.0
     wedge_s: float = 5.0
+    # freeze/offload chaos (separate RNG stream; see module docstring)
+    p_kill_mid_freeze: float = 0.0
+    p_offload_transient: float = 0.0
     ops: tuple = MUTATING_OPS
 
     def to_json(self) -> str:
@@ -92,6 +111,7 @@ class FaultyBackend:
         self.auto_retry = auto_retry
         self.on_spurious_kill = on_spurious_kill
         self._rng = np.random.default_rng(self.plan.seed)
+        self._chaos_rng = np.random.default_rng(self.plan.seed ^ _CHAOS_SEED)
         self._op_no = 0
         self._unwedge = threading.Event()
         self.injected: list[tuple] = []   # (op_no, op, fault, detail)
@@ -131,6 +151,32 @@ class FaultyBackend:
         if self.on_spurious_kill is not None:
             self.on_spurious_kill(pick, freed)
 
+    def _kill_mid_freeze(self, path: str) -> None:
+        """The kernel OOM killer fired while the freezer was quiescing:
+        the subtree dies FIRST (usage released, domains retired), then
+        the caller's freeze applies to the dead subtree — the race the
+        escalation/engine recovery paths must absorb."""
+        freed = self._inner.kill(path)
+        self.injected.append((self._op_no - 1, "freeze",
+                              "kill_mid_freeze", path))
+        if self.on_spurious_kill is not None:
+            self.on_spurious_kill(path, freed)
+
+    def offload_fault(self, session_id: str) -> None:
+        """``FrozenStore.offload_hook`` seam: wire as
+        ``caches.store.offload_hook = faulty.offload_fault`` and the
+        device->host offload fails transiently mid-copy — the hook
+        raises before the entry commits, so the store never holds a
+        partial entry and the caller's retry is safe."""
+        if self.plan.p_offload_transient <= 0.0:
+            return
+        if self._chaos_rng.random() < self.plan.p_offload_transient:
+            self.injected.append((self._op_no, "offload", "transient",
+                                  session_id))
+            raise TransientBackendError(
+                f"injected offload failure for {session_id!r} "
+                f"(seed {self.plan.seed})")
+
     def _wrap(self, name: str, fn):
         def wrapper(*a, **k):
             transient = self._pre_fault(name)
@@ -140,6 +186,10 @@ class FaultyBackend:
                     raise TransientBackendError(
                         f"injected transient failure in {name} "
                         f"(op #{self._op_no - 1}, seed {self.plan.seed})")
+            if (name == "freeze" and self.plan.p_kill_mid_freeze > 0.0
+                    and self._chaos_rng.random()
+                    < self.plan.p_kill_mid_freeze):
+                self._kill_mid_freeze(a[0] if a else k["path"])
             return fn(*a, **k)
         return wrapper
 

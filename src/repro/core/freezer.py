@@ -33,14 +33,26 @@ class FrozenStore:
         self.n_freezes = 0
         self.n_thaws = 0
         self.bytes_held = 0
+        # chaos seam: called with the session id after the host copy
+        # but BEFORE the entry commits; a raise aborts the freeze with
+        # the store unchanged (never a partial entry) — see
+        # ``FaultyBackend.offload_fault``
+        self.offload_hook: Optional[Any] = None
 
     def freeze(self, session_id: str, device_tree: Any, *, pages: int,
                meta: Optional[dict] = None, now: float = 0.0) -> None:
         """Offload a pytree of device arrays to host memory.  ``now``
-        is the caller's logical clock (engine step number)."""
+        is the caller's logical clock (engine step number).
+
+        Transactional: the entry (and the freeze/bytes accounting)
+        commits only after the whole device->host copy — and the
+        ``offload_hook`` chaos seam — succeeded, so a transient
+        mid-offload failure leaves the store exactly as it was."""
         assert session_id not in self._entries, session_id
         host = jax.tree.map(lambda x: np.asarray(x), device_tree)
         nbytes = sum(x.nbytes for x in jax.tree.leaves(host))
+        if self.offload_hook is not None:
+            self.offload_hook(session_id)      # may raise: nothing committed
         self._entries[session_id] = FrozenEntry(
             session_id, host, pages, meta or {}, float(now))
         self.n_freezes += 1

@@ -44,6 +44,7 @@ import numpy as np
 from repro.core import domains as D
 from repro.core.controller import (DEPTH, UNLIMITED, _ancestor_chain,
                                    _chain_view)
+from repro.core.pressure import sched_stall_events
 from repro.core.progs import (GraduatedThrottleProgram, SchedRequest,
                               SchedView, as_program)
 
@@ -160,8 +161,14 @@ def schedule_decision(prog, state: dict, dom: jax.Array, cost: jax.Array,
     add = jnp.where(cvalid, cost[:, None], 0)
     used = eff_used.at[jnp.maximum(chains, 0).reshape(-1)].add(
         add.reshape(-1))
+    # PSI accounting: each valid slot that may not advance — gated,
+    # quota-capped, or beaten in the budget race — is one CPU-stall
+    # event on its domain (core/pressure.py)
+    cpu_stall = state["cpu_stall"].at[di].add(
+        jnp.where(dom >= 0, sched_stall_events(dom, advance), 0))
     new_state = dict(state, vruntime=vr, cpu_used=used,
-                     cpu_stamp=jnp.full_like(state["cpu_stamp"], window))
+                     cpu_stamp=jnp.full_like(state["cpu_stamp"], window),
+                     cpu_stall=cpu_stall)
     return new_state, advance
 
 

@@ -327,6 +327,7 @@ class ShardedTableBackend:
             "peak": 0, "frozen": False, "active": True, "throttle_until": 0,
             "weight": spec.weight, "cpu_max": spec.cpu_max,
             "vruntime": 0.0, "cpu_used": 0, "cpu_stamp": -1,
+            "mem_stall": 0, "cpu_stall": 0,
         }
         if not self._in_scope(path):
             row = self.prog.neutral_row()
@@ -361,7 +362,9 @@ class ShardedTableBackend:
             cpu_max=st["cpu_max"].at[shard, idx].set(UNLIMITED),
             vruntime=st["vruntime"].at[shard, idx].set(0.0),
             cpu_used=st["cpu_used"].at[shard, idx].set(0),
-            cpu_stamp=st["cpu_stamp"].at[shard, idx].set(-1))
+            cpu_stamp=st["cpu_stamp"].at[shard, idx].set(-1),
+            mem_stall=st["mem_stall"].at[shard, idx].set(0),
+            cpu_stall=st["cpu_stall"].at[shard, idx].set(0))
         del self.index[path]
         heapq.heappush(self._free[shard], idx)
         self._recompute_flat()
@@ -409,6 +412,12 @@ class ShardedTableBackend:
                 dom = jnp.where(root_ok, idx, -1).reshape(1)
                 sub, granted, stalled = C.charge_batch(
                     sub, dom, pages.reshape(1).astype(jnp.int32), step, prog)
+                # a global-root-capacity denial is a stall event at the
+                # charged domain, exactly as the host reference (where
+                # the root max sits on the ancestor chain) counts it —
+                # charge_batch never saw the request (dom = -1)
+                sub = dict(sub, mem_stall=sub["mem_stall"].at[idx].add(
+                    jnp.where(root_ok, 0, 1)))
                 out = {k: state[k].at[shard].set(sub[k]) for k in state}
                 window = jnp.maximum(0, sub["throttle_until"][idx] - step)
                 flags = jnp.stack([granted[0].astype(jnp.int32),
@@ -473,7 +482,7 @@ class ShardedTableBackend:
                 for k in ("usage", "high", "max", "low", "priority",
                           "frozen", "active", "throttle_until", "weight",
                           "cpu_max", "flat_weight", "vruntime", "cpu_used",
-                          "cpu_stamp")}
+                          "cpu_stamp", "cpu_stall")}
         flat["parent"] = jnp.asarray(parent.reshape(-1))
         flat["prog"] = jnp.asarray(st["prog"].reshape(S * n, -1))
         dom = jnp.asarray([self._handle(*self.index[p]) for p in paths],
@@ -485,7 +494,7 @@ class ShardedTableBackend:
         self.state = dict(self.state, **{
             k: jax.device_put(
                 jnp.asarray(np.asarray(new[k]).reshape(S, n)), sh)
-            for k in ("vruntime", "cpu_used", "cpu_stamp")})
+            for k in ("vruntime", "cpu_used", "cpu_stamp", "cpu_stall")})
         return [bool(a) for a in np.asarray(advance)]
 
     # ------------------------------------------------------ subtree control
@@ -559,6 +568,16 @@ class ShardedTableBackend:
         return {"usage": usage, "peak": peak, "throttled": throttled}
 
     def read(self, path: str, file: str):
+        from repro.core import pressure as PSI
+        if file in PSI.STALL_FILES:
+            # stall counters are local per domain; roll the subtree up
+            # host-side over the logical path tree, gathering each
+            # registered path's row from its owning shard
+            key = "mem_stall" if file == "memory.stall" else "cpu_stall"
+            col = np.asarray(self.state[key])
+            return PSI.subtree_counts_by_path(
+                {p: int(col[s, i]) for p, (s, i) in self.index.items()
+                 if path_in_scope(path, p)})[path]
         if path == "/":
             # reconcile the global root across device groups
             if file == "memory.current":
@@ -630,6 +649,8 @@ class ShardedTableBackend:
                 "vruntime": st["vruntime"].reshape(-1),
                 "cpu_used": st["cpu_used"].reshape(-1),
                 "cpu_stamp": st["cpu_stamp"].reshape(-1),
+                "mem_stall": st["mem_stall"].reshape(-1),
+                "cpu_stall": st["cpu_stall"].reshape(-1),
                 "root_usage": int(st["usage"][:, 0].sum()),
                 "root_handles": [s * n for s in range(S)],
                 "placement": dict(self._tenant_shard),
@@ -671,7 +692,9 @@ class ShardedTableBackend:
                 ("flat_weight", "flat_weight", jnp.float32),
                 ("vruntime", "vruntime", jnp.float32),
                 ("cpu_used", "cpu_used", jnp.int32),
-                ("cpu_stamp", "cpu_stamp", jnp.int32)):
+                ("cpu_stamp", "cpu_stamp", jnp.int32),
+                ("mem_stall", "mem_stall", jnp.int32),
+                ("cpu_stall", "cpu_stall", jnp.int32)):
             if src in snap:
                 arr = np.asarray(snap[src]).reshape(S, n)
                 new[key] = jax.device_put(jnp.asarray(arr, dtype), sh)

@@ -38,6 +38,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import domains as D
+from repro.core import pressure as PSI
+from repro.core.adaptive import AdaptiveConfig, AdaptiveController
 from repro.core.cgroup import (AgentCgroup, DeviceTableBackend, DeviceView,
                                DomainSpec)
 from repro.core.controller import ControllerConfig
@@ -79,6 +81,12 @@ class EngineConfig:
     # hierarchical fair scheduler (core/sched.py).  None keeps the
     # binary slot gate — the pre-scheduler behavior, bit for bit.
     sched_slots: Optional[int] = None
+    # closed-loop adaptive retuner over memory.pressure / cpu.pressure
+    # (core/adaptive.py): polls at step boundaries (the async backend's
+    # epoch cadence), bumps soft limits / retunes params through
+    # zero-retrace knobs.  None (the default) keeps behavior
+    # bit-identical — the loop never runs, no pressure file is read.
+    adaptive: Optional[AdaptiveConfig] = None
     # intent hints in engine pages (LOW/MEDIUM/HIGH priority of Hint enum)
     intent_high_pages: Optional[dict] = None
     session_high: Optional[dict] = None  # sid -> memory.high (pages)
@@ -160,6 +168,16 @@ class Engine:
             # blocks on lifecycle work
             be = AsyncDaemonBackend(be)
         self.cg = AgentCgroup(be)
+        # the engine's facade clock counts steps (set_time(step_no)),
+        # not ms: one step per clock unit, PSI windows converted from
+        # ms to steps via the controller's step_ms
+        self.cg.pressure_clock(
+            step_quantum=1.0,
+            windows=(PSI.AVG10_MS / ecfg.ctrl.step_ms,
+                     PSI.AVG60_MS / ecfg.ctrl.step_ms))
+        self._adaptive = (AdaptiveController(self.cg, ecfg.adaptive)
+                          if ecfg.adaptive is not None else None)
+        self._adaptive_epoch = None
         # pool_pages is per device group: each shard root is capped at
         # pool_pages in-step, so the aggregate the daemon reasons about
         # (root_usage sums every group) is pool_pages * n_shards
@@ -349,6 +367,14 @@ class Engine:
                 if (root_usage + cand.pages
                         < e.thaw_threshold * self.pool_capacity):
                     self._thaw(cand)
+        if self._adaptive is not None:
+            # closed loop: poll every step boundary for synchronous
+            # backends; for the async daemon, once per applied epoch —
+            # pressure reads observe the state the flush just settled
+            epoch = snap.get("epoch")
+            if epoch is None or epoch != self._adaptive_epoch:
+                self._adaptive_epoch = epoch
+                self._adaptive.poll(float(self.step_no))
         self._try_admit()
 
     def _freeze(self, s: Session) -> None:

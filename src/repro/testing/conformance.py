@@ -39,7 +39,13 @@ step runs on the op-index step clock):
     ("lease_open", tool, hint|None, parent[, {kw}])
     ("lease_feedback", tool, reason)*       ("lease_close", tool)*
     ("schedule", paths, costs, budget[, step])*
+    ("adaptive", now[, {AdaptiveConfig kwargs}])*
     ("flush",)
+
+The ``adaptive`` op polls a scenario-scoped ``AdaptiveController``
+(created on first use from the op's config kwargs) and records the
+rendered ``PressureEvent`` actions — the closed loop replayed through
+the same public surface on every backend.
 
 Starred ops record an observation; every replay ends with a flush (a
 no-op on synchronous backends) and the final tree audit, so async
@@ -68,7 +74,8 @@ __all__ = ["Scenario", "ConformanceSuite", "ConformanceReport",
 # in-step on the device backends, so they only appear host-side and are
 # compared via the feature-gated full stream instead.
 PORTABLE_EVENT_KINDS = frozenset({Ev.CREATE, Ev.REMOVE, Ev.FREEZE, Ev.THAW,
-                                  Ev.OOM_KILL, Ev.OOM, Ev.FEEDBACK, Ev.DONE})
+                                  Ev.OOM_KILL, Ev.OOM, Ev.FEEDBACK, Ev.DONE,
+                                  Ev.PRESSURE})
 
 
 # --------------------------------------------------------------- scenarios
@@ -84,6 +91,10 @@ class Scenario:
     n_domains: int = 16
     requires: frozenset = frozenset()                # backend feature flags
     description: str = ""
+    # PSI meter window override (avg10, avg60) in facade-clock units —
+    # scenarios exercising pressure decay use short horizons so rises
+    # and restores happen within a replayable op count
+    pressure_windows: Optional[tuple] = None
 
 
 def replay(cg: AgentCgroup, scenario: Scenario) -> list:
@@ -92,6 +103,9 @@ def replay(cg: AgentCgroup, scenario: Scenario) -> list:
     usage/peak audit of every surviving path (op_idx -1)."""
     obs: list = []
     leases: dict = {}
+    adaptive = None
+    if scenario.pressure_windows is not None:
+        cg.pressure_clock(windows=scenario.pressure_windows)
     for i, op in enumerate(scenario.ops):
         name, *a = op
         if name == "mkdir":
@@ -145,6 +159,16 @@ def replay(cg: AgentCgroup, scenario: Scenario) -> list:
             step = a[3] if len(a) > 3 else i
             adv = cg.schedule(list(a[0]), list(a[1]), step, a[2])
             obs.append((i, "schedule", tuple(bool(x) for x in adv)))
+        elif name == "adaptive":
+            if adaptive is None:
+                from repro.core.adaptive import (AdaptiveConfig,
+                                                 AdaptiveController)
+                adaptive = AdaptiveController(
+                    cg, AdaptiveConfig(**(a[1] if len(a) > 1 else {})))
+            acts = adaptive.poll(a[0])
+            if acts:                 # quiet polls record nothing
+                obs.append((i, "adaptive",
+                            tuple(e.render() for e in acts)))
         elif name == "flush":
             cg.flush()
         else:
@@ -234,6 +258,58 @@ def _weighted_fair():
 def _sched_rounds(paths: tuple, costs: tuple, budget: int,
                   steps) -> tuple:
     return tuple(("schedule", paths, costs, budget, s) for s in steps)
+
+
+def _throttling_fair():
+    """Weighted scheduler WITH the stock graduated throttle — the
+    pressure scenarios need real stall events on both resources."""
+    from repro.core.sched import WeightedFairProgram
+    return WeightedFairProgram()
+
+
+def _pressure_ramp_ops() -> tuple:
+    """Stalls on both resources under a ticking facade clock, with the
+    PSI file surface read at three probe times."""
+    ops = [("attach", "/", "wfair_t"),
+           ("mkdir", "/t"),
+           ("mkdir", "/t/a", {"high": 40}),
+           ("mkdir", "/t/b", {"max": 100, "priority": D.LOW})]
+    for t in range(20):
+        ops.append(("set_time", float(t * 10)))
+        ops.append(("charge", "/t/a", 10, t))     # over high=40 from t=4
+        ops.append(("charge", "/t/b", 20, t))     # max=100 wall from t=5
+        # 1-cost budget: the losing slot is a CPU-stall event
+        ops.append(("schedule", ("/t/a", "/t/b"), (1, 1), 1, t))
+        if t in (5, 10, 19):
+            for f in ("memory.stall", "cpu.stall",
+                      "memory.pressure", "cpu.pressure"):
+                ops.append(("read", "/t", f))
+            ops.append(("read", "/t/a", "memory.pressure"))
+    return tuple(ops)
+
+
+# the adaptive scenario's closed-loop config: bump /t/a's soft limit
+# under sustained memory pressure (2x per bump, hard-capped by
+# memory.max), restore once pressure decays below the low threshold
+_ADAPTIVE_CFG = {"high_frac": 0.15, "low_frac": 0.05, "bump_factor": 2.0,
+                 "max_bumps": 3, "cooldown_ms": 40.0, "watch": ("/t/a",)}
+
+
+def _adaptive_retune_ops() -> tuple:
+    ops = [("attach", "/", "wfair_t"),
+           ("mkdir", "/t"),
+           ("mkdir", "/t/a", {"high": 40, "max": 200})]
+    for t in range(30):               # pressured phase: stall every step
+        ops.append(("set_time", float(t * 10)))
+        ops.append(("charge", "/t/a", 8, t))
+        ops.append(("adaptive", float(t * 10), _ADAPTIVE_CFG))
+    ops.append(("read", "/t/a", "memory.high"))
+    for t in range(30, 80):           # calm phase: pressure decays
+        ops.append(("set_time", float(t * 10)))
+        ops.append(("adaptive", float(t * 10), _ADAPTIVE_CFG))
+    ops.append(("read", "/t/a", "memory.high"))
+    ops.append(("read", "/t/a", "memory.stall"))
+    return tuple(ops)
 
 
 def _std_tree(*extra) -> tuple:
@@ -460,6 +536,25 @@ STANDARD_SCENARIOS: tuple = (
             + _sched_rounds(("/a", "/b"), (1, 1), 1, range(14, 17))
             + (("thaw", "/a"),)
             + _sched_rounds(("/a", "/b"), (1, 1), 1, range(17, 20))),
+    Scenario(
+        "pressure_ramp",
+        description="PSI-style pressure accounting: stall events from "
+                    "throttled charges, max-wall denials and lost "
+                    "scheduling rounds accumulate per domain, roll up "
+                    "the hierarchy, and render identical avg10/avg60 "
+                    "strings on every backend",
+        programs={"wfair_t": _throttling_fair},
+        pressure_windows=(200.0, 1000.0),
+        ops=_pressure_ramp_ops()),
+    Scenario(
+        "adaptive_retune",
+        description="closed loop over the public PSI surface: sustained "
+                    "memory pressure bumps memory.high (never past "
+                    "memory.max), decay restores it — with hysteresis "
+                    "and per-domain cooldown",
+        programs={"wfair_t": _throttling_fair},
+        pressure_windows=(200.0, 1000.0),
+        ops=_adaptive_retune_ops()),
 )
 
 _BY_NAME = {s.name: s for s in STANDARD_SCENARIOS}

@@ -220,3 +220,40 @@ def test_sharded_backend_serves_multitenant(model):
     assert eng.cg.usage("/") == 0
     # every tenant subtree was placed on a device group
     assert "/t" in eng.cg.backend.placement()
+
+
+def test_adaptive_observation_is_non_perturbing(model):
+    """``EngineConfig(adaptive=...)`` with thresholds the run can never
+    cross (avg10 <= 1.0 < high_frac) polls pressure every step but takes
+    no action — and reading pressure must not perturb a single decision:
+    the report is bit-identical to the ``adaptive=None`` run."""
+    from repro.core.adaptive import AdaptiveConfig
+    base = run_mode(model, "inkernel", use_freeze=True,
+                    session_high={"lo1": 12, "lo2": 12})
+    watched = run_mode(model, "inkernel", use_freeze=True,
+                       session_high={"lo1": 12, "lo2": 12},
+                       adaptive=AdaptiveConfig(high_frac=2.0))
+    assert base._adaptive is None and watched._adaptive is not None
+    assert watched._adaptive.events == []
+    assert watched.report() == base.report()
+
+
+def test_adaptive_retuner_relieves_live_engine(model):
+    """The closed loop on the live engine: watching the throttled LOW
+    session domains with a hair-trigger threshold must produce bump
+    events on the engine's step clock, and the run still completes with
+    clean accounting."""
+    from repro.core.adaptive import AdaptiveConfig
+    eng = run_mode(model, "inkernel", use_freeze=True,
+                   session_high={"lo1": 12, "lo2": 12},
+                   adaptive=AdaptiveConfig(high_frac=0.01, low_frac=0.0,
+                                           cooldown_ms=50.0,
+                                           watch=("/t/lo1", "/t/lo2")))
+    r = eng.report()
+    assert r["survival"] == 1.0
+    assert eng.cg.usage("/") == 0
+    bumps = [e for e in eng._adaptive.events if e.action == "bump_high"]
+    assert bumps, "pressure never produced a bump on the live engine"
+    for e in bumps:
+        assert e.new > e.old
+        assert e.t_ms == int(e.t_ms)          # engine step clock, not ms

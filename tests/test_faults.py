@@ -2,6 +2,7 @@
 fault-free wrapper for every backend kind, deterministic replayable
 injection schedules, loud failure on wedges, and seeded chaos fuzz
 whose failing plans are dumped as replayable JSON artifacts."""
+import dataclasses
 import os
 
 import pytest
@@ -204,6 +205,96 @@ def test_sharded_reconcile_concurrent_lifecycle_op():
     inner.reconcile_hook = None
     assert fired and cg.usage("/") == 50
     assert cg.usage("/t0") == 50
+
+
+# ------------------------------------------- freeze/offload chaos points
+
+
+def _freeze_script(plan: FaultPlan) -> tuple:
+    """Charge a session, freeze it, observe — returns (injected, cg)."""
+    be = FaultyBackend(HostTreeBackend(500), plan)
+    cg = AgentCgroup(be)
+    cg.mkdir("/s")
+    cg.mkdir("/s/sess", DomainSpec(high=100))
+    cg.try_charge("/s/sess", 80, step=0)
+    cg.freeze("/s/sess")
+    return list(be.injected), cg
+
+
+def test_kill_mid_freeze_deterministic():
+    """p_kill_mid_freeze: the subtree dies while the freezer quiesces —
+    usage is released BEFORE the freeze applies, the domain ends both
+    killed and frozen (denying charges), and the schedule replays
+    identically from the plan alone."""
+    plan = FaultPlan(seed=11, p_kill_mid_freeze=1.0)
+    injected, cg = _freeze_script(plan)
+    assert [(op, fault, d) for _, op, fault, d in injected] == \
+        [("freeze", "kill_mid_freeze", "/s/sess")]
+    assert cg.usage("/") == 0                # the kill released the pages
+    assert cg.read("/s/sess", "cgroup.freeze") == 1
+    t = cg.try_charge("/s/sess", 1, step=1)  # dead AND frozen: denied
+    assert not t.granted
+    assert _freeze_script(plan)[0] == injected      # replayable
+
+
+def test_kill_mid_freeze_hook_and_stream_isolation():
+    """The kill routes through on_spurious_kill (escalation's entry
+    point), and enabling the new chaos points does not shift the
+    original four-draw schedule of an existing plan."""
+    seen = []
+    plan = FaultPlan(seed=11, p_kill_mid_freeze=1.0)
+    be = FaultyBackend(HostTreeBackend(500), plan,
+                       on_spurious_kill=lambda p, f: seen.append((p, f)))
+    cg = AgentCgroup(be)
+    cg.mkdir("/s")
+    cg.try_charge("/s", 40, step=0)
+    cg.freeze("/s")
+    assert seen == [("/s", 40)]
+    # separate stream: the classic fault schedule is unchanged
+    base = FaultPlan(seed=3, p_transient=0.3, p_delay=0.2, delay_s=0.0001,
+                     p_spurious_kill=0.1)
+    with_chaos = dataclasses.replace(base, p_kill_mid_freeze=1.0,
+                                     p_offload_transient=1.0)
+    assert _scripted_run(base) == _scripted_run(with_chaos)
+
+
+def test_offload_transient_leaves_no_partial_entry():
+    """p_offload_transient through the FrozenStore.offload_hook seam:
+    the device->host offload fails BEFORE the entry commits — the
+    store is untouched (no partial entry, no accounting drift) and the
+    retry freezes exactly once."""
+    import numpy as np
+
+    from repro.core.freezer import FrozenStore
+
+    plan = FaultPlan(seed=5, p_offload_transient=1.0)
+    faulty = FaultyBackend(HostTreeBackend(500), plan)
+    store = FrozenStore()
+    store.offload_hook = faulty.offload_fault
+    blob = {"kv": np.ones((4, 4), np.float32)}
+    with pytest.raises(TransientBackendError):
+        store.freeze("sess_1", blob, pages=10, now=3.0)
+    assert not store.is_frozen("sess_1")     # nothing committed
+    assert store.n_freezes == 0 and store.bytes_held == 0
+    assert [(op, fault, d) for _, op, fault, d in faulty.injected] == \
+        [("offload", "transient", "sess_1")]
+    store.offload_hook = None                # transient cleared: retry
+    store.freeze("sess_1", blob, pages=10, now=4.0)
+    assert store.is_frozen("sess_1") and store.n_freezes == 1
+    entry = store.thaw("sess_1")
+    assert entry.pages == 10 and entry.frozen_at == 4.0
+
+
+def test_chaos_plan_json_roundtrip_and_back_compat():
+    """The new chaos fields survive the JSON artifact roundtrip, and a
+    pre-chaos artifact (no such keys) loads with them defaulted off."""
+    import json
+
+    plan = FaultPlan(seed=9, p_kill_mid_freeze=0.2, p_offload_transient=0.3)
+    assert FaultPlan.from_json(plan.to_json()) == plan
+    old = json.loads(FaultPlan(seed=9).to_json())
+    del old["p_kill_mid_freeze"], old["p_offload_transient"]
+    assert FaultPlan.from_json(json.dumps(old)) == FaultPlan(seed=9)
 
 
 def test_replay_over_faulty_backend_bit_identical():

@@ -1,0 +1,350 @@
+"""PSI-style pressure accounting + the adaptive retuner (PR 9).
+
+Layers under test:
+
+  * the traced stall-event helpers (pure jnp truth tables);
+  * host-side roll-up (``subtree_counts_by_path``) incl. partial views;
+  * ``PressureMeter`` decay math on the facade clock;
+  * the PSI line format round trip;
+  * ``AdaptiveController`` knob discipline (hysteresis, cooldown,
+    ``memory.max`` cap, bump ceiling, restore) over a scripted facade;
+  * live host-backend counters + control files;
+  * absolute goldens for the two conformance scenarios (the suite in
+    ``test_cgroup.py`` already diffs all six kinds against host — the
+    goldens pin host itself);
+  * snapshot back-compat: pre-pressure snapshots restore with zeroed
+    counters.
+"""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import domains as D
+from repro.core import pressure as P
+from repro.core.adaptive import AdaptiveConfig, AdaptiveController
+from repro.core.cgroup import AgentCgroup, DomainSpec, HostTreeBackend
+from repro.testing.conformance import (get_scenario, replay,
+                                       standard_backend_factory)
+
+# ------------------------------------------------------ traced helpers
+
+
+def test_charge_stall_event_truth_table():
+    stalled = jnp.asarray([True, False, True, False])
+    throttled = jnp.asarray([False, True, True, False])
+    got = P.charge_stall_event(stalled, throttled)
+    assert got.dtype == jnp.int32
+    assert np.asarray(got).tolist() == [1, 1, 1, 0]
+
+
+def test_sched_stall_events_truth_table():
+    dom = jnp.asarray([3, 0, -1, 5])
+    advance = jnp.asarray([False, True, False, True])
+    got = P.sched_stall_events(dom, advance)
+    assert got.dtype == jnp.int32
+    # invalid slots (dom < 0) never stall; granted slots never stall
+    assert np.asarray(got).tolist() == [1, 0, 0, 0]
+
+
+# ------------------------------------------------------------- roll-up
+
+
+def test_subtree_counts_full_tree():
+    counts = {"/": 1, "/a": 2, "/a/b": 3, "/c": 4}
+    total = P.subtree_counts_by_path(counts)
+    assert total == {"/": 10, "/a": 5, "/a/b": 3, "/c": 4}
+
+
+def test_subtree_counts_partial_view():
+    # a sharded table's slice: no root row, one subtree plus a stray
+    counts = {"/t/a": 2, "/t/a/x": 3, "/q": 7}
+    total = P.subtree_counts_by_path(counts)
+    assert total["/t/a"] == 5
+    assert total["/t/a/x"] == 3
+    assert total["/q"] == 7
+
+
+# ------------------------------------------------------- format / meter
+
+
+def test_psi_line_roundtrip():
+    line = P.format_psi(0.1234, 0.056789, 42)
+    assert line == "some avg10=12.34 avg60=5.68 total=42"
+    back = P.parse_psi(line)
+    assert back["avg10"] == pytest.approx(0.1234)
+    assert back["avg60"] == pytest.approx(0.0568)
+    assert back["total"] == 42
+
+
+def test_meter_seed_then_exact_decay():
+    m = P.PressureMeter(step_ms=10.0, windows=(100.0, 500.0))
+    row = m.sample("/a", "memory.stall", 5, now=0.0)
+    assert row[2] == row[3] == 0.0            # first sample only seeds
+    # 10 steps elapsed, 5 new events -> frac 0.5, folded with exp decay
+    m.sample("/a", "memory.stall", 10, now=100.0)
+    a10, a60 = math.exp(-100.0 / 100.0), math.exp(-100.0 / 500.0)
+    assert m.avg10("/a", "memory.stall") == pytest.approx(0.5 * (1 - a10))
+    assert m._rows[("/a", "memory.stall")][3] == pytest.approx(
+        0.5 * (1 - a60))
+
+
+def test_meter_frac_clamps_and_monotone_guard():
+    m = P.PressureMeter(step_ms=10.0, windows=(100.0, 500.0))
+    m.sample("/a", "memory.stall", 0, now=0.0)
+    # 500 events in 1 step -> frac clamps to 1.0
+    m.sample("/a", "memory.stall", 500, now=10.0)
+    assert m.avg10("/a", "memory.stall") == pytest.approx(
+        1.0 - math.exp(-0.1))
+    # a counter that went BACKWARDS (e.g. a lease closed out of the
+    # roll-up) clamps the delta at 0, never negative pressure
+    before = m.avg10("/a", "memory.stall")
+    m.sample("/a", "memory.stall", 100, now=20.0)
+    assert 0.0 <= m.avg10("/a", "memory.stall") < before
+
+
+def test_meter_same_clock_is_noop_and_forget_drops_subtree():
+    m = P.PressureMeter()
+    m.sample("/a", "memory.stall", 0, now=0.0)
+    m.sample("/a", "memory.stall", 50, now=10.0)
+    frozen = m.avg10("/a", "memory.stall")
+    m.sample("/a", "memory.stall", 99, now=10.0)      # dt == 0: no fold
+    assert m.avg10("/a", "memory.stall") == frozen
+    m.sample("/a/b", "memory.stall", 1, now=10.0)
+    m.sample("/ab", "memory.stall", 1, now=10.0)
+    m.forget("/a")
+    assert ("/a", "memory.stall") not in m._rows
+    assert ("/a/b", "memory.stall") not in m._rows
+    assert ("/ab", "memory.stall") in m._rows         # sibling prefix kept
+
+
+# ------------------------------------------- adaptive knob discipline
+
+
+class _Log:
+    def __init__(self):
+        self.records = []
+
+    def emit(self, *a, **k):
+        self.records.append((a, k))
+
+
+class _ScriptedCg:
+    """Minimal facade: pressure values are set directly by the test, so
+    each controller branch is reachable on demand."""
+
+    def __init__(self, files):
+        self.avg = {}                   # (path, file) -> avg10 fraction
+        self.files = dict(files)        # (path, file) -> value
+        self.log = _Log()
+        self.param_writes = []
+
+    def exists(self, p):
+        return any(k[0] == p for k in self.files)
+
+    def paths(self):
+        return ["/"] + sorted({k[0] for k in self.files})
+
+    def read(self, p, f):
+        if f in P.PRESSURE_FILES:
+            return P.format_psi(self.avg.get((p, f), 0.0), 0.0, 0)
+        return self.files[(p, f)]
+
+    def write(self, p, f, v):
+        self.files[(p, f)] = v
+
+    def update_params(self, p, kv):
+        self.param_writes.append((p, dict(kv)))
+
+
+def _scripted(high=100, maximum=D.UNLIMITED, **cfg):
+    cg = _ScriptedCg({("/a", "memory.high"): high,
+                      ("/a", "memory.max"): maximum})
+    return cg, AdaptiveController(cg, AdaptiveConfig(**cfg))
+
+
+def test_adaptive_bump_and_restore_cycle():
+    cg, ctl = _scripted(high=100, bump_factor=1.5, cooldown_ms=0.0)
+    cg.avg[("/a", "memory.pressure")] = 0.2
+    (ev,) = ctl.poll(0.0)
+    assert (ev.action, ev.old, ev.new) == ("bump_high", 100.0, 150.0)
+    assert cg.files[("/a", "memory.high")] == 150
+    cg.avg[("/a", "memory.pressure")] = 0.01
+    (ev,) = ctl.poll(1.0)
+    assert (ev.action, ev.old, ev.new) == ("restore_high", 150.0, 100.0)
+    assert cg.files[("/a", "memory.high")] == 100
+    assert ctl.poll(2.0) == []            # nothing bumped: calm is a no-op
+    assert len(cg.log.records) == 2       # every action hit the event log
+
+
+def test_adaptive_never_exceeds_memory_max():
+    cg, ctl = _scripted(high=100, maximum=120, bump_factor=2.0,
+                        cooldown_ms=0.0)
+    cg.avg[("/a", "memory.pressure")] = 0.9
+    (ev,) = ctl.poll(0.0)
+    assert ev.new == 120.0                # capped, not 200
+    assert ctl.poll(1.0) == []            # at the wall: no further bump
+    assert cg.files[("/a", "memory.high")] == 120
+
+
+def test_adaptive_bump_ceiling():
+    cg, ctl = _scripted(high=100, bump_factor=2.0, max_bumps=2,
+                        cooldown_ms=0.0)
+    cg.avg[("/a", "memory.pressure")] = 0.9
+    assert ctl.poll(0.0) and ctl.poll(1.0)
+    assert ctl.poll(2.0) == []            # max_bumps reached
+    assert cg.files[("/a", "memory.high")] == 400
+
+
+def test_adaptive_cooldown_and_dead_band():
+    cg, ctl = _scripted(high=100, cooldown_ms=100.0)
+    cg.avg[("/a", "memory.pressure")] = 0.9
+    assert ctl.poll(0.0)
+    assert ctl.poll(50.0) == []           # cooling down
+    assert ctl.poll(100.0)
+    # hysteresis: between low_frac and high_frac nothing moves, even
+    # with bumps outstanding
+    cg.avg[("/a", "memory.pressure")] = 0.10
+    assert ctl.poll(300.0) == []
+    assert cg.files[("/a", "memory.high")] == 225
+
+
+def test_adaptive_skips_unlimited_high():
+    cg, ctl = _scripted(high=D.UNLIMITED, cooldown_ms=0.0)
+    cg.avg[("/a", "memory.pressure")] = 0.9
+    assert ctl.poll(0.0) == []
+
+
+def test_adaptive_cpu_retune_roundtrip():
+    cg, ctl = _scripted(high=D.UNLIMITED, cooldown_ms=0.0,
+                        retune=(("sched_boost", 2.0, 1.0),))
+    cg.avg[("/a", "cpu.pressure")] = 0.5
+    (ev,) = ctl.poll(0.0)
+    assert (ev.action, ev.file) == ("retune", "cpu.pressure")
+    assert cg.param_writes == [("/a", {"sched_boost": 2.0})]
+    assert ctl.poll(1.0) == []            # already retuned
+    cg.avg[("/a", "cpu.pressure")] = 0.0
+    (ev,) = ctl.poll(2.0)
+    assert ev.action == "restore_params"
+    assert cg.param_writes[-1] == ("/a", {"sched_boost": 1.0})
+
+
+def test_adaptive_watch_defaults_to_children_of_root():
+    cg = _ScriptedCg({("/a", "memory.high"): 10,
+                      ("/a/leaf", "memory.high"): 10,
+                      ("/b", "memory.high"): 10})
+    ctl = AdaptiveController(cg, AdaptiveConfig())
+    assert ctl._watched() == ["/a", "/b"]
+    ctl2 = AdaptiveController(cg, AdaptiveConfig(watch=("/a/leaf", "/gone")))
+    assert ctl2._watched() == ["/a/leaf"]
+
+
+# ------------------------------------------------- live host counters
+
+
+def test_host_counters_files_and_rollup():
+    cg = AgentCgroup(HostTreeBackend(100))
+    cg.mkdir("/t")
+    cg.mkdir("/t/a", DomainSpec(high=5))
+    for s in range(6):
+        cg.set_time(s * 10.0)
+        cg.try_charge("/t/a", 3, step=s)          # over high from step 2
+    mem = cg.read("/t/a", "memory.stall")
+    assert mem > 0
+    # roll-up: the parent's counter includes the child's
+    assert cg.read("/t", "memory.stall") == mem
+    assert cg.read("/", "memory.stall") == mem
+    psi = P.parse_psi(cg.read("/t/a", "memory.pressure"))
+    assert psi["total"] == mem and psi["avg10"] == 0.0   # first read seeds
+    for s in range(6, 12):
+        cg.set_time(s * 10.0)
+        cg.try_charge("/t/a", 3, step=s)
+    psi = P.parse_psi(cg.read("/t/a", "memory.pressure"))
+    assert psi["total"] > mem and psi["avg10"] > 0.0
+    # cpu side: budget 1 over two runnable domains stalls the loser
+    cg.mkdir("/t/b")
+    for s in range(4):
+        cg.schedule(["/t/a", "/t/b"], [1, 1], s, 1)
+    assert cg.read("/t", "cpu.stall") > 0
+    # rmdir forgets the meter rows and the counters leave the roll-up
+    cg.uncharge("/t/a", cg.usage("/t/a"))
+    cg.rmdir("/t/a")
+    assert cg.read("/t", "memory.stall") == 0
+    assert ("/t/a", "memory.pressure") not in cg._pressure._rows
+
+
+# ------------------------------------------------------ pinned goldens
+
+_RAMP_GOLDEN = [
+    (28, ("/t", "memory.stall", 3)),
+    (29, ("/t", "cpu.stall", 6)),
+    (30, ("/t", "memory.pressure", "some avg10=0.00 avg60=0.00 total=3")),
+    (31, ("/t", "cpu.pressure", "some avg10=0.00 avg60=0.00 total=6")),
+    (32, ("/t/a", "memory.pressure", "some avg10=0.00 avg60=0.00 total=2")),
+    (53, ("/t", "memory.stall", 13)),
+    (54, ("/t", "cpu.stall", 11)),
+    (55, ("/t", "memory.pressure", "some avg10=22.12 avg60=4.88 total=13")),
+    (56, ("/t", "cpu.pressure", "some avg10=22.12 avg60=4.88 total=11")),
+    (57, ("/t/a", "memory.pressure", "some avg10=22.12 avg60=4.88 total=7")),
+    (94, ("/t", "memory.stall", 31)),
+    (95, ("/t", "cpu.stall", 20)),
+    (96, ("/t", "memory.pressure", "some avg10=50.34 avg60=13.06 total=31")),
+    (97, ("/t", "cpu.pressure", "some avg10=50.34 avg60=13.06 total=20")),
+    (98, ("/t/a", "memory.pressure", "some avg10=50.34 avg60=13.06 total=16")),
+]
+
+_RETUNE_GOLDEN = [
+    (29, ("[agentcgroup] PRESSURE: /t/a memory.pressure avg10=18.13% "
+          "-> bump_high 40 -> 80",)),
+    (41, ("[agentcgroup] PRESSURE: /t/a memory.pressure avg10=32.97% "
+          "-> bump_high 80 -> 160",)),
+    (53, ("[agentcgroup] PRESSURE: /t/a memory.pressure avg10=26.99% "
+          "-> bump_high 160 -> 200",)),
+    (93, ("/t/a", "memory.high", 200)),
+    (135, ("[agentcgroup] PRESSURE: /t/a memory.pressure avg10=4.93% "
+           "-> restore_high 200 -> 40",)),
+    (194, ("/t/a", "memory.high", 40)),
+    (195, ("/t/a", "memory.stall", 8)),
+]
+
+
+def _host_obs(name, kinds):
+    sc = get_scenario(name)
+    cg = AgentCgroup(
+        standard_backend_factory("host")(sc.capacity, sc.n_domains))
+    return [(i, v) for i, kind, v in replay(cg, sc) if kind in kinds]
+
+
+def test_pressure_ramp_absolute_golden():
+    got = _host_obs("pressure_ramp", ("read",))
+    assert got == _RAMP_GOLDEN
+
+
+def test_adaptive_retune_absolute_golden():
+    """The full closed loop, pinned: three bumps (the last capped at
+    ``memory.max`` = 200), decay through the dead band, one restore."""
+    got = _host_obs("adaptive_retune", ("read", "adaptive"))
+    assert got == _RETUNE_GOLDEN
+
+
+# -------------------------------------------------- snapshot back-compat
+
+
+def test_restore_from_prepressure_snapshot_zeroes_counters():
+    be = HostTreeBackend(100)
+    cg = AgentCgroup(be)
+    cg.mkdir("/a", DomainSpec(high=2))
+    for s in range(4):
+        cg.try_charge("/a", 2, step=s)
+    assert cg.read("/a", "memory.stall") > 0
+    snap = be.snapshot()
+    assert "mem_stall" in snap and "cpu_stall" in snap
+    for k in ("mem_stall", "cpu_stall"):      # a pre-PR-9 snapshot
+        snap.pop(k)
+    be2 = HostTreeBackend(100)
+    be2.restore(snap)
+    cg2 = AgentCgroup(be2)
+    assert cg2.usage("/a") == cg.usage("/a")
+    assert cg2.read("/a", "memory.stall") == 0
+    assert cg2.read("/a", "cpu.stall") == 0

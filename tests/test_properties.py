@@ -261,6 +261,76 @@ def test_schedule_parity_under_weight_fuzz(op_list):
             dev.thaw(op[1])
 
 
+# ----------------------------- pressure accounting fuzz (host vs device)
+
+
+def _mk_pressure_cg(kind: str) -> AgentCgroup:
+    from repro.core.sched import WeightedFairProgram
+    from repro.testing.conformance import standard_backend_factory
+    cg = AgentCgroup(standard_backend_factory(kind)(500, 16))
+    cg.attach("/", WeightedFairProgram())     # stock delays: throttles live
+    cg.mkdir("/t")
+    cg.mkdir("/t/a", DomainSpec(high=40))
+    cg.mkdir("/t/b", DomainSpec(max=100, priority=D.LOW))
+    return cg
+
+
+pressure_ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("charge"), st.sampled_from(["/t/a", "/t/b"]),
+                  st.integers(min_value=1, max_value=60)),
+        st.tuples(st.just("round"), st.integers(min_value=1, max_value=2)),
+        st.tuples(st.just("uncharge"), st.sampled_from(["/t/a", "/t/b"]),
+                  st.integers(min_value=1, max_value=40)),
+        st.just(("tick",)),
+    ),
+    min_size=1, max_size=40)
+
+
+@given(pressure_ops)
+@settings(max_examples=40, deadline=None)
+def test_pressure_parity_under_fuzz(op_list):
+    """Random charge/gate/clock sequences: host and device accumulate
+    bit-identical stall counters after every op, and the facade meters
+    — fed the same counters on the same clock — render identical PSI
+    strings (the in-step accounting + host-side averaging contract all
+    six kinds inherit)."""
+    host, dev = _mk_pressure_cg("host"), _mk_pressure_cg("device")
+    paths = ["/t/a", "/t/b"]
+    watch = ("/", "/t", "/t/a", "/t/b")
+    now, step = 0.0, 0
+    for op in op_list:
+        if op[0] == "charge":
+            want = host.try_charge(op[1], op[2], step=step)
+            got = dev.try_charge(op[1], op[2], step=step)
+            assert (got.granted, got.stalled) == (want.granted,
+                                                  want.stalled), (op, step)
+            step += 1
+        elif op[0] == "round":
+            want = host.schedule(paths, [1, 1], step, op[1])
+            got = dev.schedule(paths, [1, 1], step, op[1])
+            assert got == want, (op, step)
+            step += 1
+        elif op[0] == "uncharge":
+            amt = min(op[2], host.usage(op[1]))
+            if amt:
+                host.uncharge(op[1], amt)
+                dev.uncharge(op[1], amt)
+        else:
+            now += 25.0
+            host.set_time(now)
+            dev.set_time(now)
+            for p in watch:
+                for f in ("memory.pressure", "cpu.pressure"):
+                    assert dev.read(p, f) == host.read(p, f), (p, f)
+        for p in watch:
+            for f in ("memory.stall", "cpu.stall"):
+                assert dev.read(p, f) == host.read(p, f), (p, f)
+    for p in watch:
+        for f in ("memory.pressure", "cpu.pressure"):
+            assert dev.read(p, f) == host.read(p, f), (p, f)
+
+
 # ------------------------------ async daemon vs inner backend (stateful)
 
 
