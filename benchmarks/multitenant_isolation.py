@@ -90,7 +90,7 @@ def run_config(kind: str, n_tenants: int, steps: int, pool: int) -> dict:
     grants = np.zeros((steps, n_tenants), bool)
     requested = amt_all > 0
     state = view.state
-    t0 = time.time()
+    t0 = time.perf_counter()
     for s in range(steps):
         state, g, _ = step_fn(state, dom, jnp.asarray(amt_all[s]), s)
         grants[s] = np.asarray(g)
@@ -100,7 +100,7 @@ def run_config(kind: str, n_tenants: int, steps: int, pool: int) -> dict:
             retire = jnp.asarray(np.where(grants[s - 2], amt_all[s - 2], 0))
             state = view.uncharge(state, dom, retire)
     jax.block_until_ready(state["usage"])
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     view.commit(state)
 
     out = {"kind": kind, "steps_per_s": steps / dt, "tenants": []}
@@ -160,12 +160,12 @@ def run_fairness(weights=(400, 200, 100, 100), steps: int = 2000,
         cost = jnp.ones((n,), jnp.int32)
         grants = np.zeros((steps, n), bool)
         state = view.state
-        t0 = time.time()
+        t0 = time.perf_counter()
         for s in range(steps):
             state, adv = step_fn(state, dom, cost, s)
             grants[s] = np.asarray(adv)
         jax.block_until_ready(state["vruntime"])
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         view.commit(state)
 
         share = grants.sum(axis=0) / max(int(grants.sum()), 1)

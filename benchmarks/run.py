@@ -18,7 +18,7 @@ import time
 
 
 def main() -> None:
-    t0 = time.time()
+    t0 = time.perf_counter()
     from benchmarks import (adaptive_pressure, characterization, engine_fig8,
                             engine_overhead, escalation_waste, fig8_replay,
                             mismatch, multitenant_isolation,
@@ -38,7 +38,7 @@ def main() -> None:
     else:
         print("\n(results/dryrun missing — run "
               "`python -m repro.launch.dryrun --all` for roofline tables)")
-    print(f"\nbenchmarks done in {time.time() - t0:.1f}s")
+    print(f"\nbenchmarks done in {time.perf_counter() - t0:.1f}s")
 
 
 if __name__ == "__main__":

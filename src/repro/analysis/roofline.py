@@ -59,6 +59,64 @@ def roofline_from_costs(cfg: ModelConfig, shape: ShapeConfig, parsed: dict,
     }
 
 
+def enforcement_roofline(n_domains: int = 64, batch: int = 32) -> dict:
+    """Roofline the fused Pallas enforcement kernel against the lax
+    scan reference at the same shape: compile both, read the XLA cost
+    model (flops / bytes accessed), and bound each with the HW table.
+
+    Both paths are compiled explicitly (``_lax_charge_batch`` vs
+    ``kernels.enforcement.fused_charge_batch``) so the numbers do not
+    depend on the runtime dispatch seam.  Off-TPU the fused kernel
+    compiles in interpret mode — its cost numbers then describe the
+    traced jax ops, which is still the apples-to-apples comparison the
+    gate in ``benchmarks/engine_overhead.py`` wall-clocks.  The hot
+    path is control-state sized (KBs, not GBs): both columns sit far
+    under the memory roofline, and the win the fused pass buys is
+    fewer HBM round-trips per request slot (``bytes_ratio``).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro import compat
+    from repro.core import controller as C
+    from repro.core.cgroup import AgentCgroup, DeviceTableBackend, DomainSpec
+    from repro.core.progs import GraduatedThrottleProgram, TokenBucketProgram
+    from repro.kernels.enforcement import fused_charge_batch
+
+    cg = AgentCgroup(DeviceTableBackend(1 << 20, n_domains=n_domains))
+    cg.attach("/", GraduatedThrottleProgram())
+    cg.mkdir("/grad", DomainSpec(high=1000))
+    cg.mkdir("/bkt")
+    cg.attach("/bkt", TokenBucketProgram(bucket_capacity=64,
+                                         refill=(1.0, 1.0, 1.0)))
+    progs = cg.programs
+    view = cg.device_view()
+    dom = jnp.array([cg.handle("/grad"), cg.handle("/bkt")]
+                    * (batch // 2) + [cg.handle("/grad")] * (batch % 2),
+                    jnp.int32)
+    amt = jnp.ones((batch,), jnp.int32)
+
+    def lax_fn(st, d, a):
+        return C._lax_charge_batch(st, d, a, 0, progs)
+
+    def fused_fn(st, d, a):
+        return fused_charge_batch(st, d, a, 0, progs)
+
+    out: dict = {"n_domains": n_domains, "batch": batch,
+                 "n_programs": len(progs), "on_tpu": compat.on_tpu()}
+    for name, fn in (("lax", lax_fn), ("fused", fused_fn)):
+        compiled = jax.jit(fn).lower(view.state, dom, amt).compile()
+        ca = compat.cost_analysis(compiled)
+        flops = float(ca.get("flops", 0.0))
+        byts = float(ca.get("bytes accessed", 0.0))
+        out[name] = {"flops": flops, "bytes": byts,
+                     "compute_s": flops / HW["flops_bf16"],
+                     "memory_s": byts / HW["hbm_bw"]}
+    if out["lax"]["bytes"] and out["fused"]["bytes"]:
+        out["bytes_ratio"] = out["fused"]["bytes"] / out["lax"]["bytes"]
+    return out
+
+
 def fmt_seconds(s: float) -> str:
     if s >= 1.0:
         return f"{s:.2f}s"

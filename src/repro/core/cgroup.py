@@ -59,7 +59,9 @@ from repro.core import pressure as P
 from repro.core.events import Ev, EventLog, OomEvent
 from repro.core.intent import Feedback, Hint, hint_to_high, make_feedback
 from repro.core.progs import (ChainView, PolicyProgram, Request, as_program,
-                              charge_decision, path_in_scope)
+                              as_programs, charge_decision, check_registry,
+                              pad_row, path_in_scope,
+                              registry_unknown_params, registry_width)
 
 UNLIMITED = D.UNLIMITED
 
@@ -176,38 +178,76 @@ class HostTreeBackend:
         self._ids: dict[str, int] = {"/": 0}
         self._paths: dict[int, str] = {0: "/"}
         self._next_id = 1
-        self.prog = as_program(prog)
-        self.attach_scope = "/"
+        self.progs = as_programs(prog)
+        self.scopes = ["/"]
         self._rows: dict[str, np.ndarray] = {"/": self.prog.default_row()}
-        self._decide = None              # jitted charge_decision, per program
+        self._pids: dict[str, int] = {"/": 0}    # path -> registry slot
+        self._decide = None              # jitted charge_decision, per registry
         self.tree.root.flat_weight = 1.0
 
     # -------------------------------------------------------------- programs
+
+    @property
+    def prog(self) -> PolicyProgram:
+        """The primary (slot 0) program — registry trace constants and
+        the single-program compatibility surface."""
+        return self.progs[0]
+
+    @property
+    def attach_scope(self) -> str:
+        return self.scopes[0]
 
     def _in_scope(self, path: str) -> bool:
         return path_in_scope(self.attach_scope, path)
 
     def attach(self, scope: str, prog: PolicyProgram) -> None:
-        self.prog = prog
-        self.attach_scope = scope
+        """Root attach resets the registry to this one program (every
+        domain on its default row — the pre-registry semantics).  A
+        subtree attach composes: the program takes a registry slot,
+        in-scope domains move to it; everything outside keeps its
+        current program and live rows."""
+        prog = as_program(prog)
         self._decide = None
-        self._rows = {p: (prog.default_row() if self._in_scope(p)
-                          else prog.neutral_row())
-                      for p in self.tree._index}
+        if scope == "/":
+            self.progs = (prog,)
+            self.scopes = ["/"]
+            self._rows = {p: prog.default_row() for p in self.tree._index}
+            self._pids = {p: 0 for p in self.tree._index}
+            return
+        if scope in self.scopes:
+            k = self.scopes.index(scope)
+            self.progs = self.progs[:k] + (prog,) + self.progs[k + 1:]
+        else:
+            k = len(self.progs)
+            self.progs = self.progs + (prog,)
+            self.scopes.append(scope)
+        check_registry(self.progs)
+        width = registry_width(self.progs)
+        for p in self.tree._index:
+            if path_in_scope(scope, p):
+                self._pids[p] = k
+                self._rows[p] = pad_row(prog.default_row(), width)
+            else:
+                self._rows[p] = pad_row(self._rows[p], width)
 
     def update_params(self, path: str, kv: dict) -> None:
-        cols = {self.prog.col(k): float(v) for k, v in kv.items()}
+        unknown = registry_unknown_params(self.progs, kv)
+        if unknown:
+            raise KeyError(
+                f"no registered program has param(s) {sorted(unknown)}")
         for p in self.tree._index:
             if path_in_scope(path, p):
-                for c, v in cols.items():
-                    self._rows[p][c] = v
+                pr = self.progs[self._pids[p]]
+                for k, v in kv.items():
+                    if k in pr.param_names:
+                        self._rows[p][pr.col(k)] = float(v)
 
     def _decide_fn(self):
         if self._decide is None:
             import jax
-            prog = self.prog
+            progs = self.progs
             self._decide = jax.jit(
-                lambda view, req: charge_decision(prog, view, req))
+                lambda view, req: charge_decision(progs, view, req))
         return self._decide
 
     def _recompute_flat(self) -> None:
@@ -229,13 +269,11 @@ class HostTreeBackend:
         self._ids[path] = h
         self._paths[h] = path
         parent = parent_path(path)
-        if not self._in_scope(path):
-            row = self.prog.neutral_row()
-        elif self._in_scope(parent):
-            row = self._rows[parent].copy()   # settings propagate down
-        else:
-            row = self.prog.default_row()
-        self._rows[path] = row
+        # children inherit the parent's live row AND program slot
+        # (settings propagate down; a child created after a subtree
+        # attach runs the subtree's program, not the root default)
+        self._rows[path] = self._rows[parent].copy()
+        self._pids[path] = self._pids[parent]
         self._recompute_flat()
         return h
 
@@ -247,6 +285,7 @@ class HostTreeBackend:
             self.charge_unchecked(parent, residual)
         self._paths.pop(self._ids.pop(path), None)
         self._rows.pop(path, None)
+        self._pids.pop(path, None)
         self._recompute_flat()
         return residual
 
@@ -282,6 +321,7 @@ class HostTreeBackend:
                                        jnp.float32),
             priority=jnp.int32(d.priority),
             params=jnp.asarray(self._rows[path], jnp.float32),
+            prog_id=jnp.int32(self._pids[path]),
         )
         req = Request(jnp.int32(self._ids[path] % (1 << 30)),
                       jnp.int32(pages),
@@ -290,8 +330,9 @@ class HostTreeBackend:
         self._rows[path] = np.array(verdict.params)     # writable copy
         # PSI accounting — the same event formula charge_batch scatters
         # on device: a stalled or throttled decision stalls the domain
+        # (saturating at INT32_MAX like the traced accumulators)
         if bool(verdict.stall) or bool(throttle):
-            d.mem_stall += 1
+            d.mem_stall = min(d.mem_stall + 1, P.INT32_MAX)
 
         # ``delay_ms`` on the ticket = the throttle window now pending on
         # the charged domain, in ms — the device backends' convention
@@ -377,10 +418,12 @@ class HostTreeBackend:
                                      jnp.int32),
             "cpu_stall": jnp.asarray([d.cpu_stall for d in doms],
                                      jnp.int32),
+            "prog_id": jnp.asarray([self._pids[p] for p in order],
+                                   jnp.int32),
         }
         dom = jnp.asarray([row[p] for p in paths], jnp.int32)
         cost = jnp.asarray(list(costs), jnp.int32)
-        st, advance = jit_schedule(self.prog, state, dom, cost,
+        st, advance = jit_schedule(self.progs, state, dom, cost,
                                    int(step), int(budget))
         vr = np.asarray(st["vruntime"])
         used = np.asarray(st["cpu_used"])
@@ -493,6 +536,8 @@ class HostTreeBackend:
                                       np.int64),
                 "cpu_stall": np.array([idx[p].cpu_stall for p in order],
                                       np.int64),
+                "prog_id": np.array([self._pids[p] for p in order],
+                                    np.int64),
                 "root_usage": self.tree.root.usage}
 
     def restore(self, snap: dict) -> None:
@@ -530,6 +575,8 @@ class HostTreeBackend:
                 d.mem_stall = int(snap["mem_stall"][i])
                 d.cpu_stall = int(snap["cpu_stall"][i])
             self._rows[p] = np.asarray(snap["params"][i]).copy()
+            pid = snap.get("prog_id")
+            self._pids[p] = int(pid[i]) if pid is not None else 0
         self._recompute_flat()
 
     def set_time(self, t: float) -> None:
@@ -555,15 +602,20 @@ class DeviceView:
 
     @property
     def prog(self) -> PolicyProgram:
-        """The attached program (read at trace time, so a re-jit after
-        ``attach`` picks up the new decision code)."""
+        """The primary attached program (read at trace time, so a re-jit
+        after ``attach`` picks up the new decision code)."""
         return self._backend.table.prog
+
+    @property
+    def progs(self) -> tuple:
+        """The full program registry (read at trace time)."""
+        return self._backend.table.progs
 
     def charge(self, state, dom, amt, step):
         """In-step hierarchical charge: (state, granted, stalled) —
-        dispatched into the attached program."""
+        dispatched into each domain's registered program."""
         from repro.core import controller as C
-        return C.charge_batch(state, dom, amt, step, self.prog)
+        return C.charge_batch(state, dom, amt, step, self.progs)
 
     def account(self, state, dom, amt):
         """Post-hoc unconditional charge (the user-space baseline:
@@ -578,13 +630,13 @@ class DeviceView:
     def gate(self, state, dom, step):
         """Per-slot advance gate (the program's ``on_gate``)."""
         from repro.core import controller as C
-        return C.slot_gate(state, dom, step, self.prog)
+        return C.slot_gate(state, dom, step, self.progs)
 
     def schedule(self, state, dom, cost, step, budget):
         """Weighted per-slot scheduling round: (state, advance) —
         the gate plus cpu.weight fair share and cpu.max throttling."""
         from repro.core import sched as S
-        return S.schedule_decision(self.prog, state, dom, cost, step,
+        return S.schedule_decision(self.progs, state, dom, cost, step,
                                    budget)
 
     def commit(self, state: dict) -> None:
@@ -617,6 +669,10 @@ class DeviceTableBackend:
     @property
     def prog(self) -> PolicyProgram:
         return self.table.prog
+
+    @property
+    def progs(self) -> tuple:
+        return self.table.progs
 
     def attach(self, scope: str, prog: PolicyProgram) -> None:
         self.table.attach(scope, prog)
@@ -690,7 +746,7 @@ class DeviceTableBackend:
         idx = self.table.index[path]
         st, granted, stalled = C.charge_batch(
             self.table.state, jnp.array([idx], jnp.int32),
-            jnp.array([pages], jnp.int32), step, self.table.prog)
+            jnp.array([pages], jnp.int32), step, self.table.progs)
         self.table.state = st
         window = max(0, int(st["throttle_until"][idx]) - step)
         return ChargeTicket(granted=bool(granted[0]),
@@ -719,7 +775,7 @@ class DeviceTableBackend:
         from repro.core.sched import jit_schedule
         dom = jnp.asarray([self.table.index[p] for p in paths], jnp.int32)
         cost = jnp.asarray(list(costs), jnp.int32)
-        st, advance = jit_schedule(self.table.prog, self.table.state,
+        st, advance = jit_schedule(self.table.progs, self.table.state,
                                    dom, cost, int(step), int(budget))
         self.table.state = st
         return [bool(a) for a in np.asarray(advance)]
@@ -821,6 +877,7 @@ class DeviceTableBackend:
                 "cpu_stamp": np.asarray(st["cpu_stamp"]),
                 "mem_stall": np.asarray(st["mem_stall"]),
                 "cpu_stall": np.asarray(st["cpu_stall"]),
+                "prog_id": np.asarray(st["prog_id"]),
                 "root_usage": int(st["usage"][0])}
 
     def restore(self, snap: dict) -> None:
@@ -854,7 +911,8 @@ class DeviceTableBackend:
                 ("cpu_used", "cpu_used", jnp.int32),
                 ("cpu_stamp", "cpu_stamp", jnp.int32),
                 ("mem_stall", "mem_stall", jnp.int32),
-                ("cpu_stall", "cpu_stall", jnp.int32)):
+                ("cpu_stall", "cpu_stall", jnp.int32),
+                ("prog_id", "prog_id", jnp.int32)):
             if src in snap:
                 st[key] = jnp.asarray(np.asarray(snap[src]), dtype)
         t.state = st
@@ -1077,15 +1135,27 @@ class AgentCgroup:
 
     @property
     def program(self) -> PolicyProgram:
-        """The attached enforcement program (memcg_bpf_ops analogue)."""
+        """The primary attached enforcement program (memcg_bpf_ops
+        analogue) — registry slot 0."""
         return self.backend.prog
+
+    @property
+    def programs(self) -> tuple:
+        """The full program registry: slot 0 is the primary; subtree
+        attaches append further slots, selected per domain by the
+        ``prog_id`` control-state column."""
+        return tuple(getattr(self.backend, "progs", (self.backend.prog,)))
 
     def attach(self, path: str, prog: PolicyProgram) -> None:
         """Attach a ``PolicyProgram`` to the subtree at ``path`` — the
-        BPF-attach analogue.  Swaps the decision code every backend
-        dispatches into; domains outside the subtree run the program's
-        neutral parameters (the memcg contract still applies to them).
-        Jitted consumers must re-trace (``Engine.attach_program`` does).
+        BPF-attach analogue.  A root attach (``path="/"``) resets the
+        registry to this one program.  A subtree attach COMPOSES: the
+        program takes a registry slot and only in-scope domains dispatch
+        into it (via their ``prog_id``), so different tenants run truly
+        different enforcement code; domains outside the subtree keep
+        their current program and live parameters (the memcg contract
+        still applies to them).  Jitted consumers must re-trace
+        (``Engine.attach_program`` does).
         """
         assert path == "/" or self.backend.exists(path), path
         self.backend.attach(path, prog)
@@ -1093,7 +1163,8 @@ class AgentCgroup:
     def update_params(self, path: str, **kv) -> None:
         """Retune the live program for the subtree at ``path`` — a BPF
         map write: pure state, takes effect next charge, never a
-        recompile.  Keys must name columns of ``program.param_names``.
+        recompile.  Each domain resolves keys through its own program;
+        keys unknown to every registered program raise ``KeyError``.
         """
         self.backend.update_params(path, kv)
 

@@ -40,9 +40,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import domains as D
-from repro.core.pressure import charge_stall_event
+from repro.core.pressure import charge_stall_event, saturating_count
 from repro.core.progs import (ChainView, PolicyProgram, Request, as_program,
-                              charge_decision, path_in_scope)
+                              as_programs, charge_decision, check_registry,
+                              gate_decision, pad_row, path_in_scope,
+                              registry_unknown_params, registry_width)
 
 UNLIMITED = D.UNLIMITED
 DEPTH = 4          # root / tenant / session / tool-call
@@ -62,8 +64,11 @@ class ControllerConfig:
 
 def new_state(capacity_pages: int, n_domains: int = 64,
               prog: Optional[PolicyProgram] = None) -> dict:
-    """Fresh device state with only the root (index 0) configured."""
-    prog = as_program(prog)
+    """Fresh device state with only the root (index 0) configured.
+    ``prog`` may be a registry tuple: the param table is sized to the
+    widest program and every domain starts on the primary (slot 0)."""
+    progs = as_programs(prog)
+    width = registry_width(progs)
     n = n_domains
     st = {
         "usage": jnp.zeros((n,), jnp.int32),
@@ -76,7 +81,10 @@ def new_state(capacity_pages: int, n_domains: int = 64,
         "active": jnp.zeros((n,), bool),
         "throttle_until": jnp.zeros((n,), jnp.int32),
         "peak": jnp.zeros((n,), jnp.int32),
-        "prog": prog.init_params(n),
+        "prog": jnp.broadcast_to(
+            jnp.asarray(pad_row(progs[0].default_row(), width)),
+            (n, width)),
+        "prog_id": jnp.zeros((n,), jnp.int32),
         # CPU scheduling rows (cpu.weight / cpu.max, core/sched.py)
         "weight": jnp.full((n,), D.DEFAULT_WEIGHT, jnp.int32),
         "cpu_max": jnp.full((n,), UNLIMITED, jnp.int32),
@@ -123,6 +131,7 @@ def _chain_view(state, usage, throttle_until, params, d) -> ChainView:
         throttle_until=jnp.where(valid, throttle_until[cidx], 0),
         priority=state["priority"][di],
         params=params[di],
+        prog_id=state["prog_id"][di],
     )
 
 
@@ -140,15 +149,32 @@ def charge_batch(state: dict, dom: jax.Array, amt: jax.Array, step,
     Zero-amount requests are gated only by freeze/throttle (a decode
     step that does not cross a page boundary allocates nothing but must
     still respect cgroup.freeze).
-    """
-    prog = as_program(prog)
 
+    On TPU (or under ``REPRO_FORCE_PALLAS_INTERPRET=1``) the whole
+    batch runs in the fused Pallas enforcement kernel
+    (``kernels/enforcement.py``) — one pass over the control-state
+    table, ancestor walk resident in VMEM; the lax path below is the
+    CPU/interpret fallback and the kernel's conformance reference.
+    """
+    progs = as_programs(prog)
+    fused = _fused_charge_or_none()
+    if fused is not None:
+        return fused(state, dom.astype(jnp.int32), amt.astype(jnp.int32),
+                     step, progs)
+    return _lax_charge_batch(state, dom, amt, step, progs)
+
+
+def _lax_charge_batch(state: dict, dom: jax.Array, amt: jax.Array, step,
+                      progs):
+    """The lax.scan reference body of ``charge_batch`` — callable
+    directly (bypassing the fused dispatch) so the roofline and the
+    overhead benchmark can compile both paths side by side."""
     def one(carry, req):
         usage, peak, throttle_until, params, mem_stall = carry
         d, a = req
         view = _chain_view(state, usage, throttle_until, params, d)
         verdict, delay_ms, throttle = charge_decision(
-            prog, view, Request(d, a, step))
+            progs, view, Request(d, a, step))
         grant = (d >= 0) & verdict.grant
         stalled = (d >= 0) & verdict.stall
 
@@ -160,7 +186,7 @@ def charge_batch(state: dict, dom: jax.Array, amt: jax.Array, step,
         peak = jnp.maximum(peak, usage)
 
         di = jnp.maximum(d, 0)
-        dly = jnp.ceil(delay_ms / prog.step_ms).astype(jnp.int32)
+        dly = jnp.ceil(delay_ms / progs[0].step_ms).astype(jnp.int32)
         tu = jnp.where(throttle & (d >= 0),
                        jnp.maximum(throttle_until[di], step + dly),
                        throttle_until[di])
@@ -169,10 +195,12 @@ def charge_batch(state: dict, dom: jax.Array, amt: jax.Array, step,
         params = params.at[di].set(
             jnp.where(d >= 0, verdict.params, params[di]))
         # PSI accounting: a stalled or throttled decision is one
-        # memory-stall event on the charged domain (core/pressure.py)
-        mem_stall = mem_stall.at[di].add(
+        # memory-stall event on the charged domain (core/pressure.py),
+        # saturating at INT32_MAX instead of wrapping negative
+        mem_stall = mem_stall.at[di].set(saturating_count(
+            mem_stall[di],
             jnp.where(d >= 0,
-                      charge_stall_event(stalled, (d >= 0) & throttle), 0))
+                      charge_stall_event(stalled, (d >= 0) & throttle), 0)))
         return (usage, peak, throttle_until, params, mem_stall), \
             (grant, stalled)
 
@@ -216,14 +244,44 @@ def uncharge_batch(state: dict, dom: jax.Array, amt: jax.Array):
 
 def slot_gate(state: dict, slot_dom: jax.Array, step, prog=None) -> jax.Array:
     """May each slot advance this step?  Dispatches ``on_gate`` of the
-    attached program (default: no frozen/throttled ancestor)."""
-    prog = as_program(prog)
+    slot's domain program (default: no frozen/throttled ancestor).  On
+    TPU / forced interpret the fused Pallas gate kernel takes the same
+    decision in one pass (``kernels/enforcement.py``)."""
+    progs = as_programs(prog)
+    fused = _fused_gate_or_none()
+    if fused is not None:
+        return fused(state, slot_dom.astype(jnp.int32), step, progs)
+    return _lax_slot_gate(state, slot_dom, step, progs)
 
+
+def _lax_slot_gate(state: dict, slot_dom: jax.Array, step, progs):
+    """The vmapped reference body of ``slot_gate`` (see
+    ``_lax_charge_batch``)."""
     def one(d):
         view = _chain_view(state, state["usage"], state["throttle_until"],
                            state["prog"], d)
-        return (d >= 0) & prog.on_gate(view, step)
+        return (d >= 0) & gate_decision(progs, view, step)
     return jax.vmap(one)(slot_dom.astype(jnp.int32))
+
+
+def _fused_charge_or_none():
+    """Resolve the fused Pallas charge kernel, or None for the lax
+    fallback — python-time dispatch (a trace constant), mirroring
+    ``kernels/ops._resolve``: Pallas on real TPUs or under the
+    ``REPRO_FORCE_PALLAS_INTERPRET=1`` conformance override."""
+    from repro import compat
+    if not (compat.on_tpu() or compat.force_interpret()):
+        return None
+    from repro.kernels.enforcement import fused_charge_batch
+    return fused_charge_batch
+
+
+def _fused_gate_or_none():
+    from repro import compat
+    if not (compat.on_tpu() or compat.force_interpret()):
+        return None
+    from repro.kernels.enforcement import fused_slot_gate
+    return fused_slot_gate
 
 
 # -------------------------------------------------------------- host mirror
@@ -243,50 +301,96 @@ class DeviceDomainTable:
                  prog: Optional[PolicyProgram] = None):
         self.cfg = cfg
         self.n = n_domains
-        self.prog = prog if prog is not None else as_program(cfg)
-        self.attach_scope = "/"
-        self.state = new_state(capacity_pages, n_domains, self.prog)
+        self.progs = as_programs(prog if prog is not None else cfg)
+        self.scopes = ["/"] * len(self.progs)
+        self.state = new_state(capacity_pages, n_domains, self.progs)
         self.index: dict[str, int] = {"/": 0}
         self._free = list(range(1, n_domains))   # heap: lowest index first
 
     # ------------------------------------------------------------ programs
 
+    @property
+    def prog(self) -> PolicyProgram:
+        """The primary (slot 0) program — the registry's trace constants
+        (``step_ms`` etc.) and the single-program compatibility surface."""
+        return self.progs[0]
+
+    @property
+    def attach_scope(self) -> str:
+        return self.scopes[0]
+
     def in_scope(self, path: str) -> bool:
         return path_in_scope(self.attach_scope, path)
 
     def attach(self, scope: str, prog: PolicyProgram) -> None:
-        """Swap the enforcement program (a recompile for jitted consumers
-        — like loading a new BPF object).  Domains inside ``scope`` get
-        the program's default row; domains outside get the neutral row
-        (the contract still applies everywhere)."""
-        self.prog = prog
-        self.attach_scope = scope
-        rows = np.broadcast_to(prog.neutral_row(),
-                               (self.n, prog.n_params)).copy()
+        """Attach ``prog`` to the subtree at ``scope`` (a recompile for
+        jitted consumers — like loading a new BPF object).  A root
+        attach resets the registry to this single program, every domain
+        on its default row (the pre-registry semantics, bit-identical).
+        A subtree attach COMPOSES: the program takes a registry slot
+        (replacing a previous attach at the same scope), domains inside
+        ``scope`` move to it on its default row, and domains outside
+        keep their current program and live rows — different tenants
+        run truly different enforcement code."""
+        prog = as_program(prog)
+        if scope == "/":
+            self.progs = (prog,)
+            self.scopes = ["/"]
+            rows = np.broadcast_to(prog.default_row(),
+                                   (self.n, prog.n_params)).copy()
+            self.state = dict(self.state, prog=jnp.asarray(rows),
+                              prog_id=jnp.zeros((self.n,), jnp.int32))
+            return
+        if scope in self.scopes:
+            k = self.scopes.index(scope)
+            self.progs = self.progs[:k] + (prog,) + self.progs[k + 1:]
+        else:
+            k = len(self.progs)
+            self.progs = self.progs + (prog,)
+            self.scopes.append(scope)
+        check_registry(self.progs)
+        width = registry_width(self.progs)
+        old = np.asarray(self.state["prog"])
+        rows = np.zeros((self.n, width), np.float32)
+        keep = min(width, old.shape[1])
+        rows[:, :keep] = old[:, :keep]
+        ids = np.asarray(self.state["prog_id"]).copy()
         for path, idx in self.index.items():
-            if self.in_scope(path):
-                rows[idx] = prog.default_row()
-        self.state = dict(self.state, prog=jnp.asarray(rows))
+            if path_in_scope(scope, path):
+                ids[idx] = k
+                rows[idx] = pad_row(prog.default_row(), width)
+        self.state = dict(self.state, prog=jnp.asarray(rows),
+                          prog_id=jnp.asarray(ids))
 
     def update_params(self, paths: list, kv: dict) -> None:
         """Retune the live program for the given domains — a pure state
-        write, never a retrace."""
-        cols = {self.prog.col(k): float(v) for k, v in kv.items()}
-        idxs = jnp.asarray([self.index[p] for p in paths], jnp.int32)
+        write, never a retrace.  Each domain resolves column names
+        through its OWN program (its ``prog_id`` slot); names unknown
+        to every registered program raise ``KeyError``."""
+        unknown = registry_unknown_params(self.progs, kv)
+        if unknown:
+            raise KeyError(
+                f"no registered program has param(s) {sorted(unknown)}; "
+                f"knobs: {sorted(set().union(*(p.param_names for p in self.progs)))}")
+        ids = np.asarray(self.state["prog_id"])
         prog = self.state["prog"]
-        for c, v in cols.items():
-            prog = prog.at[idxs, c].set(v)
+        for p in paths:
+            idx = self.index[p]
+            pr = self.progs[int(ids[idx])]
+            for k, v in kv.items():
+                if k in pr.param_names:
+                    prog = prog.at[idx, pr.col(k)].set(float(v))
         self.state = dict(self.state, prog=prog)
 
     def _fresh_row(self, path: str, pidx: int) -> np.ndarray:
         """New domains inherit their parent's live row (cgroup settings
-        propagate down) when both sit in the attach scope."""
-        if not self.in_scope(path):
-            return self.prog.neutral_row()
-        parent_path = path.rsplit("/", 1)[0] or "/"
-        if self.in_scope(parent_path):
-            return np.asarray(self.state["prog"][pidx])
-        return self.prog.default_row()
+        propagate down) — and, with ``_fresh_prog_id``, the parent's
+        program slot: a child created after a subtree attach runs the
+        subtree's program, not the root default."""
+        return np.asarray(self.state["prog"][pidx])
+
+    def _fresh_prog_id(self, pidx: int) -> int:
+        return int(self.state["prog_id"][pidx])
 
     # ------------------------------------------------------------ lifecycle
 
@@ -314,6 +418,7 @@ class DeviceDomainTable:
             throttle_until=st["throttle_until"].at[idx].set(0),
             prog=st["prog"].at[idx].set(
                 jnp.asarray(self._fresh_row(path, pidx))),
+            prog_id=st["prog_id"].at[idx].set(self._fresh_prog_id(pidx)),
             weight=st["weight"].at[idx].set(weight),
             cpu_max=st["cpu_max"].at[idx].set(cpu_max),
             flat_weight=st["flat_weight"].at[idx].set(0.0),
@@ -344,7 +449,8 @@ class DeviceDomainTable:
                           cpu_used=st["cpu_used"].at[idx].set(0),
                           cpu_stamp=st["cpu_stamp"].at[idx].set(-1),
                           mem_stall=st["mem_stall"].at[idx].set(0),
-                          cpu_stall=st["cpu_stall"].at[idx].set(0))
+                          cpu_stall=st["cpu_stall"].at[idx].set(0),
+                          prog_id=st["prog_id"].at[idx].set(0))
         heapq.heappush(self._free, idx)
 
     def set_frozen(self, path: str, flag: bool) -> None:

@@ -328,6 +328,10 @@ class AsyncDaemonBackend:
     def prog(self) -> PolicyProgram:
         return self._observe(lambda: self.inner.prog)
 
+    @property
+    def progs(self) -> tuple:
+        return self._observe(lambda: self.inner.progs)
+
     def device_view(self):
         """The INNER backend's jit-safe view: in-step enforcement never
         goes through the queue (the daemon only mutates between epochs,

@@ -50,6 +50,27 @@ STALL_FILES = ("memory.stall", "cpu.stall")
 
 STALL_OF = {"memory.pressure": "memory.stall", "cpu.pressure": "cpu.stall"}
 
+# Saturation ceiling for the stall accumulators.  The counters are i32
+# control-state rows (x64 is off); a long-lived engine accumulating one
+# event per step would wrap negative after ~2^31 events and corrupt the
+# PSI averages (the meter clamps negative deltas to 0, so a wrapped
+# counter reads as permanent calm).  Every accumulation site — traced
+# and host-side — saturates here instead.
+INT32_MAX = 2**31 - 1
+
+
+def saturating_count(counter, events):
+    """Accumulate stall ``events`` into an i32 ``counter`` saturating at
+    ``INT32_MAX`` instead of wrapping negative.  Pure ``jnp`` and
+    elementwise, so it composes with scalar scan carries and whole-row
+    updates alike; the wrapped sum in the untaken branch is computed
+    but always discarded, keeping the op deterministic on every
+    backend."""
+    counter = jnp.asarray(counter, jnp.int32)
+    inc = jnp.asarray(events, jnp.int32)
+    return jnp.where(inc > INT32_MAX - counter,
+                     jnp.int32(INT32_MAX), counter + inc)
+
 
 def charge_stall_event(stalled, throttled):
     """1 iff this charge decision counts as a memory-stall event: the

@@ -66,7 +66,9 @@ class Request(NamedTuple):
 class ChainView(NamedTuple):
     """The charged domain's ancestor chain (self-first), padded/masked so
     invalid entries are neutral (usage 0, limits UNLIMITED, not frozen).
-    ``params`` is the charged domain's program row."""
+    ``params`` is the charged domain's program row; ``prog_id`` selects
+    its decision code from the attached program registry (slot 0 — the
+    primary program — when only one program is attached)."""
     valid: jax.Array            # (depth,) bool
     usage: jax.Array            # (depth,) i32 — pre-charge
     high: jax.Array             # (depth,) i32
@@ -76,6 +78,7 @@ class ChainView(NamedTuple):
     throttle_until: jax.Array   # (depth,) i32/f32, same clock as req.step
     priority: jax.Array         # i32 scalar — the charged domain's
     params: jax.Array           # (P,) f32 — the charged domain's row
+    prog_id: jax.Array = 0      # i32 scalar — registry slot of the domain
 
 
 class Verdict(NamedTuple):
@@ -109,6 +112,7 @@ class SchedView(NamedTuple):
     vruntime: jax.Array         # f32 scalar — fairness account
     priority: jax.Array         # i32 scalar
     params: jax.Array           # (P,) f32 — the domain's program row
+    prog_id: jax.Array = 0      # i32 scalar — registry slot of the domain
 
 
 class PolicyProgram:
@@ -197,15 +201,12 @@ class PolicyProgram:
         return jnp.float32(0.0)
 
 
-def charge_decision(prog: PolicyProgram, view: ChainView, req: Request):
-    """The complete per-request decision, shared verbatim by every
-    backend: contract + program verdict, then post-charge soft-limit
-    math routed through ``on_over_high``.
-
-    Returns ``(verdict, delay_ms, throttle)`` where ``throttle`` says
-    whether a window must be imposed on the charged domain
-    (``throttle_until = max(old, now + quantize(delay_ms))``).
-    """
+def _decision_one(prog: PolicyProgram, view: ChainView, req: Request):
+    """The complete per-request decision for ONE program: contract +
+    program verdict, then post-charge soft-limit math routed through
+    ``on_over_high``.  ``charge_decision`` dispatches here — directly
+    for a single attached program, via ``lax.switch`` per ``prog_id``
+    for a multi-program registry."""
     v = prog.on_charge(view, req)
     add = jnp.where(v.grant, req.amt, 0)
     new_usage = jnp.where(view.valid, view.usage + add, 0)
@@ -222,15 +223,141 @@ def charge_decision(prog: PolicyProgram, view: ChainView, req: Request):
     return v, dly, throttle
 
 
+def _single_prog(progs: tuple):
+    """Python-time registry dispatch: the registry length is a trace
+    constant, so a one-entry registry compiles to exactly the old
+    single-program decision (bit-identical traces)."""
+    return progs[0] if len(progs) == 1 else None
+
+
+def _decision_branch(prog: PolicyProgram):
+    return lambda view, req: _decision_one(prog, view, req)
+
+
+def charge_decision(prog, view: ChainView, req: Request):
+    """The complete per-request decision, shared verbatim by every
+    backend.  ``prog`` is one program or a registry tuple; with a
+    registry, ``view.prog_id`` picks the branch via ``lax.switch`` —
+    different tenants run truly different enforcement code in the same
+    trace (out-of-range ids clamp to the primary slot 0).
+
+    Returns ``(verdict, delay_ms, throttle)`` where ``throttle`` says
+    whether a window must be imposed on the charged domain
+    (``throttle_until = max(old, now + quantize(delay_ms))``).
+    """
+    progs = as_programs(prog)
+    single = _single_prog(progs)
+    if single is not None:
+        return _decision_one(single, view, req)
+    idx = jnp.clip(jnp.asarray(view.prog_id, jnp.int32),
+                   0, len(progs) - 1)
+    return jax.lax.switch(idx, tuple(_decision_branch(p) for p in progs),
+                          view, req)
+
+
+def _gate_branch(prog: PolicyProgram):
+    return lambda view, step: prog.on_gate(view, step)
+
+
+def gate_decision(prog, view: ChainView, step):
+    """``on_gate`` with registry dispatch — single program calls the
+    hook directly (bit-identical to the pre-registry trace); a
+    multi-program registry switches on ``view.prog_id``."""
+    progs = as_programs(prog)
+    single = _single_prog(progs)
+    if single is not None:
+        return single.on_gate(view, step)
+    idx = jnp.clip(jnp.asarray(view.prog_id, jnp.int32),
+                   0, len(progs) - 1)
+    return jax.lax.switch(idx, tuple(_gate_branch(p) for p in progs),
+                          view, jnp.asarray(step))
+
+
+def _sched_branch(prog: PolicyProgram):
+    return lambda view, req: prog.on_schedule(view, req)
+
+
+def schedule_weight(prog, view: SchedView, req: SchedRequest):
+    """``on_schedule`` with registry dispatch (same shape as
+    ``gate_decision``): the slot's effective scheduling weight under
+    its domain's own program."""
+    progs = as_programs(prog)
+    single = _single_prog(progs)
+    if single is not None:
+        return single.on_schedule(view, req)
+    idx = jnp.clip(jnp.asarray(view.prog_id, jnp.int32),
+                   0, len(progs) - 1)
+    return jax.lax.switch(idx, tuple(_sched_branch(p) for p in progs),
+                          view, req)
+
+
 def as_program(prog_or_cfg) -> PolicyProgram:
     """Normalize the enforcement argument: a program passes through, a
     ``ControllerConfig`` (or None) becomes the stock graduated-throttle
-    program with matching scalars."""
+    program with matching scalars.  Registry tuples normalize to their
+    primary (slot 0) program."""
+    if isinstance(prog_or_cfg, (tuple, list)):
+        return as_programs(prog_or_cfg)[0]
     if prog_or_cfg is None:
         return GraduatedThrottleProgram()
     if isinstance(prog_or_cfg, PolicyProgram):
         return prog_or_cfg
     return GraduatedThrottleProgram.from_config(prog_or_cfg)
+
+
+def as_programs(prog_or_cfg) -> tuple:
+    """Normalize the enforcement argument to a program registry: an
+    ordered tuple of ``PolicyProgram``s, entry 0 the primary (root
+    default).  Single programs/configs/None become a one-entry tuple;
+    tuples/lists pass through element-normalized."""
+    if isinstance(prog_or_cfg, (tuple, list)):
+        progs = tuple(as_program(p) for p in prog_or_cfg)
+        return progs if progs else (GraduatedThrottleProgram(),)
+    return (as_program(prog_or_cfg),)
+
+
+def check_registry(progs: tuple) -> tuple:
+    """Validate a multi-program registry's trace constants: every
+    program must agree on ``step_ms``/``sched_window``/``sched_lag``
+    (they quantize the shared throttle clock and the shared scheduler
+    window — per-slot values would desynchronize the one trace all
+    slots share).  Returns the registry; raises ``ValueError``."""
+    head = progs[0]
+    for p in progs[1:]:
+        for attr in ("step_ms", "sched_window", "sched_lag"):
+            if getattr(p, attr) != getattr(head, attr):
+                raise ValueError(
+                    f"program registry disagrees on {attr}: "
+                    f"{type(head).__name__}={getattr(head, attr)} vs "
+                    f"{type(p).__name__}={getattr(p, attr)} — registry "
+                    "trace constants come from the primary program")
+    return progs
+
+
+def registry_unknown_params(progs, kv) -> set:
+    """Param names no registered program declares — the typo guard for
+    ``update_params`` under a multi-program registry (a name known to
+    ANY slot is writable; domains whose program lacks it are skipped)."""
+    names = set(kv)
+    for p in as_programs(progs):
+        names -= set(p.param_names)
+    return names
+
+
+def registry_width(progs) -> int:
+    """Shared param-table width for a registry: the widest program.
+    Narrower programs never read past their own ``n_params``, and the
+    zero padding is neutral for every stock program."""
+    return max(p.n_params for p in as_programs(progs))
+
+
+def pad_row(row: np.ndarray, width: int) -> np.ndarray:
+    """Zero-pad one program row to the registry width (f32)."""
+    row = np.asarray(row, np.float32)
+    if row.shape[0] >= width:
+        return row[:width]
+    return np.concatenate([row, np.zeros((width - row.shape[0],),
+                                         np.float32)])
 
 
 # ----------------------------------------------------------- stock programs

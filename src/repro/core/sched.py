@@ -44,9 +44,10 @@ import numpy as np
 from repro.core import domains as D
 from repro.core.controller import (DEPTH, UNLIMITED, _ancestor_chain,
                                    _chain_view)
-from repro.core.pressure import sched_stall_events
+from repro.core.pressure import saturating_count, sched_stall_events
 from repro.core.progs import (GraduatedThrottleProgram, SchedRequest,
-                              SchedView, as_program)
+                              SchedView, as_programs, gate_decision,
+                              schedule_weight)
 
 DEFAULT_WEIGHT = D.DEFAULT_WEIGHT
 MIN_WEIGHT, MAX_WEIGHT = 1, 10000
@@ -97,17 +98,17 @@ def schedule_decision(prog, state: dict, dom: jax.Array, cost: jax.Array,
     ``i`` may run this step.  Deterministic: vruntime ranking with
     slot-index tie-break, quota checked against pre-step window usage.
     """
-    prog = as_program(prog)
+    progs = as_programs(prog)
     dom = dom.astype(jnp.int32)
     cost = cost.astype(jnp.int32)
     step = jnp.asarray(step, jnp.int32)
-    window = step // prog.sched_window
+    window = step // progs[0].sched_window
     eff_used = jnp.where(state["cpu_stamp"] == window, state["cpu_used"], 0)
 
     def per_slot(d, a):
         view = _chain_view(state, state["usage"], state["throttle_until"],
                            state["prog"], d)
-        gate = (d >= 0) & prog.on_gate(view, step)
+        gate = (d >= 0) & gate_decision(progs, view, step)
         chain = _ancestor_chain(state["parent"], jnp.maximum(d, 0))
         cvalid = (chain >= 0) & (d >= 0)
         cidx = jnp.maximum(chain, 0)
@@ -125,8 +126,10 @@ def schedule_decision(prog, state: dict, dom: jax.Array, cost: jax.Array,
             vruntime=state["vruntime"][di],
             priority=state["priority"][di],
             params=state["prog"][di],
+            prog_id=state["prog_id"][di],
         )
-        w = jnp.asarray(prog.on_schedule(sview, SchedRequest(d, a, step)),
+        w = jnp.asarray(schedule_weight(progs, sview,
+                                        SchedRequest(d, a, step)),
                         jnp.float32)
         return gate & quota_ok, w
 
@@ -151,7 +154,7 @@ def schedule_decision(prog, state: dict, dom: jax.Array, cost: jax.Array,
     vmin = jnp.min(jnp.where(weighted, vr[di], jnp.inf),
                    initial=jnp.inf)   # identity: m may be 0 (no slots)
     floor = jnp.where(jnp.any(weighted),
-                      vmin - jnp.float32(prog.sched_lag), -jnp.inf)
+                      vmin - jnp.float32(progs[0].sched_lag), -jnp.inf)
     vr = jnp.where(state["active"], jnp.maximum(vr, floor), vr)
 
     # cpu.max window accounting: advancing slots charge their chain
@@ -163,9 +166,12 @@ def schedule_decision(prog, state: dict, dom: jax.Array, cost: jax.Array,
         add.reshape(-1))
     # PSI accounting: each valid slot that may not advance — gated,
     # quota-capped, or beaten in the budget race — is one CPU-stall
-    # event on its domain (core/pressure.py)
-    cpu_stall = state["cpu_stall"].at[di].add(
+    # event on its domain (core/pressure.py); slots may share a domain,
+    # so gather the per-round increments first and saturate the whole
+    # row at INT32_MAX (never wrap negative)
+    stall_inc = jnp.zeros_like(state["cpu_stall"]).at[di].add(
         jnp.where(dom >= 0, sched_stall_events(dom, advance), 0))
+    cpu_stall = saturating_count(state["cpu_stall"], stall_inc)
     new_state = dict(state, vruntime=vr, cpu_used=used,
                      cpu_stamp=jnp.full_like(state["cpu_stamp"], window),
                      cpu_stall=cpu_stall)

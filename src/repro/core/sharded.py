@@ -46,7 +46,10 @@ from repro.core import controller as C
 from repro.core import domains as D
 from repro.core.cgroup import ChargeTicket, DomainSpec, parent_path
 from repro.core.events import Ev, EventLog
-from repro.core.progs import PolicyProgram, as_program, path_in_scope
+from repro.core.pressure import saturating_count
+from repro.core.progs import (PolicyProgram, as_program, as_programs,
+                              check_registry, pad_row, path_in_scope,
+                              registry_unknown_params, registry_width)
 
 UNLIMITED = D.UNLIMITED
 
@@ -82,6 +85,10 @@ class ShardedDeviceView:
     @property
     def prog(self) -> PolicyProgram:
         return self._backend.prog
+
+    @property
+    def progs(self) -> tuple:
+        return self._backend.progs
 
     # ------------------------------------------------------------- helpers
 
@@ -121,7 +128,7 @@ class ShardedDeviceView:
                                  (self.n_shards,))
 
         def local(st, d, a, s):
-            return C.charge_batch(st, d, a, s[()], self.prog)
+            return C.charge_batch(st, d, a, s[()], self.progs)
 
         new_state, g2, s2 = self._run(local, state, dom2, amt2, step2,
                                       n_out=3)
@@ -154,7 +161,7 @@ class ShardedDeviceView:
                                  (self.n_shards,))
 
         def local(st, d, s):
-            return (C.slot_gate(st, d, s[()], self.prog),)
+            return (C.slot_gate(st, d, s[()], self.progs),)
 
         (g2,) = self._run(local, state, dom2, step2, n_out=1)
         return g2[shard, jnp.arange(m)] & valid
@@ -173,7 +180,7 @@ class ShardedDeviceView:
                                  (self.n_shards,))
 
         def local(st, d, c, s):
-            return S.schedule_decision(self.prog, st, d, c, s[()], budget)
+            return S.schedule_decision(self.progs, st, d, c, s[()], budget)
 
         new_state, a2 = self._run(local, state, dom2, cost2, step2, n_out=2)
         return new_state, a2[shard, jnp.arange(m)] & valid
@@ -192,8 +199,8 @@ class ShardedTableBackend:
                  prog: Optional[PolicyProgram] = None):
         self.cfg = cfg or C.ControllerConfig()
         self.capacity = capacity
-        self.prog = prog if prog is not None else as_program(self.cfg)
-        self.attach_scope = "/"
+        self.progs = as_programs(prog if prog is not None else self.cfg)
+        self.scopes = ["/"] * len(self.progs)
         if mesh is None:
             devs = jax.devices()
             n_shards = n_shards or len(devs)
@@ -202,7 +209,7 @@ class ShardedTableBackend:
         self.mesh = mesh
         self.n_shards = mesh.devices.size
         self.per_shard_domains = n_domains
-        st = _stacked_state(capacity, self.n_shards, n_domains, self.prog)
+        st = _stacked_state(capacity, self.n_shards, n_domains, self.progs)
         sh = NamedSharding(mesh, P("shard"))
         self.state = {k: jax.device_put(v, sh) for k, v in st.items()}
         # path -> (shard, local idx); "/" is every shard's local root but
@@ -218,30 +225,72 @@ class ShardedTableBackend:
 
     # ------------------------------------------------------------- programs
 
+    @property
+    def prog(self) -> PolicyProgram:
+        """The primary (slot 0) program — the registry's trace constants
+        (``step_ms`` etc.) and the single-program compatibility surface."""
+        return self.progs[0]
+
+    @property
+    def attach_scope(self) -> str:
+        return self.scopes[0]
+
     def _in_scope(self, path: str) -> bool:
         return path_in_scope(self.attach_scope, path)
 
     def attach(self, scope: str, prog: PolicyProgram) -> None:
-        self.prog = prog
-        self.attach_scope = scope
+        """Same compose semantics as ``DeviceDomainTable.attach``: a root
+        attach resets the registry; a subtree attach takes (or replaces)
+        a registry slot and moves only in-scope domains to it — rows
+        padded to the registry width, per-shard."""
+        prog = as_program(prog)
         self._host_charge = None
-        rows = np.broadcast_to(
-            prog.neutral_row(),
-            (self.n_shards, self.per_shard_domains, prog.n_params)).copy()
-        if scope == "/":                # every shard's local root is in scope
-            rows[:, 0] = prog.default_row()
-        for path, (s, i) in self.index.items():
-            if path != "/" and self._in_scope(path):
-                rows[s, i] = prog.default_row()
+        S, n = self.n_shards, self.per_shard_domains
         sh = NamedSharding(self.mesh, P("shard"))
+        if scope == "/":
+            self.progs = (prog,)
+            self.scopes = ["/"]
+            rows = np.broadcast_to(prog.default_row(),
+                                   (S, n, prog.n_params)).copy()
+            self.state = dict(
+                self.state, prog=jax.device_put(jnp.asarray(rows), sh),
+                prog_id=jax.device_put(jnp.zeros((S, n), jnp.int32), sh))
+            return
+        if scope in self.scopes:
+            k = self.scopes.index(scope)
+            self.progs = self.progs[:k] + (prog,) + self.progs[k + 1:]
+        else:
+            k = len(self.progs)
+            self.progs = self.progs + (prog,)
+            self.scopes.append(scope)
+        check_registry(self.progs)
+        width = registry_width(self.progs)
+        old = np.asarray(self.state["prog"])
+        rows = np.zeros((S, n, width), np.float32)
+        keep = min(width, old.shape[2])
+        rows[:, :, :keep] = old[:, :, :keep]
+        ids = np.asarray(self.state["prog_id"]).copy()
+        for path, (s, i) in self.index.items():
+            if path_in_scope(scope, path):
+                ids[s, i] = k
+                rows[s, i] = pad_row(prog.default_row(), width)
         self.state = dict(self.state,
-                          prog=jax.device_put(jnp.asarray(rows), sh))
+                          prog=jax.device_put(jnp.asarray(rows), sh),
+                          prog_id=jax.device_put(jnp.asarray(ids), sh))
 
     def update_params(self, path: str, kv: dict) -> None:
-        cols = {self.prog.col(k): float(v) for k, v in kv.items()}
+        unknown = registry_unknown_params(self.progs, kv)
+        if unknown:
+            raise KeyError(
+                f"no registered program has param(s) {sorted(unknown)}; "
+                f"knobs: {sorted(set().union(*(p.param_names for p in self.progs)))}")
+        ids = np.asarray(self.state["prog_id"])
         prog = self.state["prog"]
         for p in self._subtree(path):
             s, i = self.index[p]
+            pr = self.progs[int(ids[s, i])]
+            cols = {pr.col(k): float(v) for k, v in kv.items()
+                    if k in pr.param_names}
             for c, v in cols.items():
                 if p == "/":            # root params on every shard's root
                     prog = prog.at[:, 0, c].set(v)
@@ -329,15 +378,14 @@ class ShardedTableBackend:
             "vruntime": 0.0, "cpu_used": 0, "cpu_stamp": -1,
             "mem_stall": 0, "cpu_stall": 0,
         }
-        if not self._in_scope(path):
-            row = self.prog.neutral_row()
-        elif self._in_scope(parent_path(path)):
-            row = np.asarray(st["prog"][shard, pidx])   # propagate down
-        else:
-            row = self.prog.default_row()   # path is the attach-scope root
+        # children inherit their parent's live row AND program slot, so a
+        # domain created after a subtree attach runs the subtree's program
+        row = np.asarray(st["prog"][shard, pidx])
+        pid = int(st["prog_id"][shard, pidx])
         self.state = dict(st, **{
             k: st[k].at[shard, idx].set(v) for k, v in upd.items()},
-            prog=st["prog"].at[shard, idx].set(jnp.asarray(row)))
+            prog=st["prog"].at[shard, idx].set(jnp.asarray(row)),
+            prog_id=st["prog_id"].at[shard, idx].set(pid))
         self._recompute_flat()
         self.log.emit(self._now, Ev.CREATE, path, high=spec.high,
                       max=spec.max, shard=shard)
@@ -364,7 +412,8 @@ class ShardedTableBackend:
             cpu_used=st["cpu_used"].at[shard, idx].set(0),
             cpu_stamp=st["cpu_stamp"].at[shard, idx].set(-1),
             mem_stall=st["mem_stall"].at[shard, idx].set(0),
-            cpu_stall=st["cpu_stall"].at[shard, idx].set(0))
+            cpu_stall=st["cpu_stall"].at[shard, idx].set(0),
+            prog_id=st["prog_id"].at[shard, idx].set(0))
         del self.index[path]
         heapq.heappush(self._free[shard], idx)
         self._recompute_flat()
@@ -402,7 +451,7 @@ class ShardedTableBackend:
         gather (the packed flags vector) instead of per-key slice syncs
         (the ROADMAP open item)."""
         if self._host_charge is None:
-            prog = self.prog
+            progs = self.progs
 
             def fn(state, shard, idx, pages, step):
                 cap = state["max"][0, 0]
@@ -411,13 +460,15 @@ class ShardedTableBackend:
                 sub = jax.tree.map(lambda v: v[shard], state)
                 dom = jnp.where(root_ok, idx, -1).reshape(1)
                 sub, granted, stalled = C.charge_batch(
-                    sub, dom, pages.reshape(1).astype(jnp.int32), step, prog)
+                    sub, dom, pages.reshape(1).astype(jnp.int32), step, progs)
                 # a global-root-capacity denial is a stall event at the
                 # charged domain, exactly as the host reference (where
                 # the root max sits on the ancestor chain) counts it —
-                # charge_batch never saw the request (dom = -1)
-                sub = dict(sub, mem_stall=sub["mem_stall"].at[idx].add(
-                    jnp.where(root_ok, 0, 1)))
+                # charge_batch never saw the request (dom = -1); the
+                # counter saturates at INT32_MAX like every other site
+                sub = dict(sub, mem_stall=sub["mem_stall"].at[idx].set(
+                    saturating_count(sub["mem_stall"][idx],
+                                     jnp.where(root_ok, 0, 1))))
                 out = {k: state[k].at[shard].set(sub[k]) for k in state}
                 window = jnp.maximum(0, sub["throttle_until"][idx] - step)
                 flags = jnp.stack([granted[0].astype(jnp.int32),
@@ -482,13 +533,13 @@ class ShardedTableBackend:
                 for k in ("usage", "high", "max", "low", "priority",
                           "frozen", "active", "throttle_until", "weight",
                           "cpu_max", "flat_weight", "vruntime", "cpu_used",
-                          "cpu_stamp", "cpu_stall")}
+                          "cpu_stamp", "cpu_stall", "prog_id")}
         flat["parent"] = jnp.asarray(parent.reshape(-1))
         flat["prog"] = jnp.asarray(st["prog"].reshape(S * n, -1))
         dom = jnp.asarray([self._handle(*self.index[p]) for p in paths],
                           jnp.int32)
         cost = jnp.asarray(list(costs), jnp.int32)
-        new, advance = jit_schedule(self.prog, flat, dom, cost, int(step),
+        new, advance = jit_schedule(self.progs, flat, dom, cost, int(step),
                                     int(budget))
         sh = NamedSharding(self.mesh, P("shard"))
         self.state = dict(self.state, **{
@@ -651,6 +702,7 @@ class ShardedTableBackend:
                 "cpu_stamp": st["cpu_stamp"].reshape(-1),
                 "mem_stall": st["mem_stall"].reshape(-1),
                 "cpu_stall": st["cpu_stall"].reshape(-1),
+                "prog_id": st["prog_id"].reshape(-1),
                 "root_usage": int(st["usage"][:, 0].sum()),
                 "root_handles": [s * n for s in range(S)],
                 "placement": dict(self._tenant_shard),
@@ -694,7 +746,8 @@ class ShardedTableBackend:
                 ("cpu_used", "cpu_used", jnp.int32),
                 ("cpu_stamp", "cpu_stamp", jnp.int32),
                 ("mem_stall", "mem_stall", jnp.int32),
-                ("cpu_stall", "cpu_stall", jnp.int32)):
+                ("cpu_stall", "cpu_stall", jnp.int32),
+                ("prog_id", "prog_id", jnp.int32)):
             if src in snap:
                 arr = np.asarray(snap[src]).reshape(S, n)
                 new[key] = jax.device_put(jnp.asarray(arr, dtype), sh)

@@ -1,0 +1,204 @@
+"""Fused Pallas enforcement kernel — the charge/account/gate hot path.
+
+The lax reference path (``controller.charge_batch``) serializes the
+per-request decisions with ``lax.scan``, re-gathering the ancestor
+chain from HBM-resident state each iteration.  This kernel fuses the
+whole batch into ONE ``pl.pallas_call``: the ``(n_domains,)`` control
+state table is copied into VMEM once, a sequential grid walks the
+request slots (the same serialization the memcg page-counter hierarchy
+applies), and the masked DEPTH-deep ancestor-chain walk, the program
+dispatch (``charge_decision`` — ``lax.switch`` over the attached
+registry when more than one program is attached), the hierarchical
+usage scatter, the throttle-window write and the PSI stall accounting
+all run on the resident copy.  Only the final table and the packed
+per-slot flags leave the core.
+
+Decision math is NOT duplicated here: the kernel body builds the same
+``ChainView`` (via ``controller._chain_view``) and calls the same
+``charge_decision`` / ``gate_decision`` the lax path calls, so the two
+paths trace identical per-request math — conformance certifies them
+bit-identical on every backend kind.  Dispatch lives in
+``controller._fused_charge_or_none``: Pallas on real TPUs, interpret
+mode under ``REPRO_FORCE_PALLAS_INTERPRET=1`` (the conformance
+override), lax everywhere else.
+
+This module is a decision module for tracelint purposes: the kernel
+bodies and wrappers admit no host syncs, no python branches on traced
+values, and no suppression pragmas.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro import compat
+from repro.core.controller import _chain_view, _ancestor_chain
+from repro.core.pressure import charge_stall_event, saturating_count
+from repro.core.progs import (Request, as_programs, charge_decision,
+                              gate_decision)
+
+
+def _view_state(parent_ref, high_ref, max_ref, low_ref, frozen_ref,
+                priority_ref, prog_id_ref):
+    """VMEM-resident chain-view columns as one value dict, shaped like
+    the controller state ``_chain_view`` reads (``frozen`` travels as
+    i32 — TPU VMEM wants lane-typed vectors, bools do not tile)."""
+    return {"parent": parent_ref[...], "high": high_ref[...],
+            "max": max_ref[...], "low": low_ref[...],
+            "frozen": frozen_ref[...] != 0,
+            "priority": priority_ref[...],
+            "prog_id": prog_id_ref[...]}
+
+
+def _full_specs(arrays):
+    """Whole-array blocks pinned to the origin: every sequential grid
+    step sees (and for outputs, keeps resident) the full table."""
+    return [pl.BlockSpec(a.shape, lambda z, nd=a.ndim: (0,) * nd)
+            for a in arrays]
+
+
+def _charge_kernel(dom_ref, amt_ref, step_ref, parent_ref, high_ref,
+                   max_ref, low_ref, frozen_ref, priority_ref, prog_id_ref,
+                   usage0_ref, peak0_ref, tu0_ref, params0_ref, stall0_ref,
+                   usage_ref, peak_ref, tu_ref, params_ref, stall_ref,
+                   granted_ref, stalled_ref, *, progs):
+    """One request slot per sequential grid step; the output refs ARE
+    the carry (same block every step, so the table stays in VMEM)."""
+    z = pl.program_id(0)
+
+    @pl.when(z == 0)
+    def _init():
+        usage_ref[...] = usage0_ref[...]
+        peak_ref[...] = peak0_ref[...]
+        tu_ref[...] = tu0_ref[...]
+        params_ref[...] = params0_ref[...]
+        stall_ref[...] = stall0_ref[...]
+
+    d = dom_ref[z]
+    a = amt_ref[z]
+    step = step_ref[0]
+    state = _view_state(parent_ref, high_ref, max_ref, low_ref, frozen_ref,
+                        priority_ref, prog_id_ref)
+    usage = usage_ref[...]
+    tu = tu_ref[...]
+    params = params_ref[...]
+
+    # identical decision to the lax path: same view, same dispatch
+    view = _chain_view(state, usage, tu, params, d)
+    verdict, delay_ms, throttle = charge_decision(progs, view,
+                                                  Request(d, a, step))
+    grant = (d >= 0) & verdict.grant
+    stalled = (d >= 0) & verdict.stall
+
+    chain = _ancestor_chain(state["parent"], jnp.maximum(d, 0))
+    cvalid = (chain >= 0) & (d >= 0)
+    cidx = jnp.maximum(chain, 0)
+    add = jnp.where(cvalid & grant, a, 0)
+    usage = usage.at[cidx].add(add)
+    peak = jnp.maximum(peak_ref[...], usage)
+
+    di = jnp.maximum(d, 0)
+    dly = jnp.ceil(delay_ms / progs[0].step_ms).astype(jnp.int32)
+    tu_d = jnp.where(throttle & (d >= 0),
+                     jnp.maximum(tu[di], step + dly), tu[di])
+    tu = tu.at[di].set(jnp.where(d >= 0, tu_d, tu[di]))
+    params = params.at[di].set(
+        jnp.where(d >= 0, verdict.params, params[di]))
+    stall = stall_ref[...]
+    stall = stall.at[di].set(saturating_count(
+        stall[di],
+        jnp.where(d >= 0, charge_stall_event(stalled, (d >= 0) & throttle),
+                  0)))
+
+    usage_ref[...] = usage
+    peak_ref[...] = peak
+    tu_ref[...] = tu
+    params_ref[...] = params
+    stall_ref[...] = stall
+    granted_ref[z] = grant.astype(jnp.int32)
+    stalled_ref[z] = stalled.astype(jnp.int32)
+
+
+def fused_charge_batch(state: dict, dom: jax.Array, amt: jax.Array, step,
+                       prog=None):
+    """Drop-in fused replacement for the lax ``charge_batch`` body:
+    same signature, bit-identical ``(new_state, granted, stalled)``."""
+    progs = as_programs(prog)
+    m = dom.shape[0]
+    n = state["usage"].shape[0]
+    dom = dom.astype(jnp.int32)
+    amt = amt.astype(jnp.int32)
+    step_arr = jnp.asarray(step, jnp.int32).reshape(1)
+    inputs = (dom, amt, step_arr, state["parent"], state["high"],
+              state["max"], state["low"],
+              state["frozen"].astype(jnp.int32), state["priority"],
+              state["prog_id"], state["usage"], state["peak"],
+              state["throttle_until"], state["prog"], state["mem_stall"])
+    out_shape = [
+        jax.ShapeDtypeStruct((n,), jnp.int32),               # usage
+        jax.ShapeDtypeStruct((n,), jnp.int32),               # peak
+        jax.ShapeDtypeStruct((n,), jnp.int32),               # throttle_until
+        jax.ShapeDtypeStruct(state["prog"].shape, jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),               # mem_stall
+        jax.ShapeDtypeStruct((m,), jnp.int32),               # granted
+        jax.ShapeDtypeStruct((m,), jnp.int32),               # stalled
+    ]
+    outs = pl.pallas_call(
+        functools.partial(_charge_kernel, progs=progs),
+        grid=(m,),
+        in_specs=_full_specs(inputs),
+        out_specs=_full_specs(out_shape),
+        out_shape=out_shape,
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("arbitrary",)),
+        interpret=not compat.on_tpu(),
+        name="fused_enforcement_charge",
+    )(*inputs)
+    usage, peak, tu, params, stall, granted, stalled = outs
+    new_state = dict(state, usage=usage, peak=peak, throttle_until=tu,
+                     prog=params, mem_stall=stall)
+    return new_state, granted.astype(bool), stalled.astype(bool)
+
+
+def _gate_kernel(dom_ref, step_ref, parent_ref, high_ref, max_ref, low_ref,
+                 frozen_ref, priority_ref, prog_id_ref, usage_ref, tu_ref,
+                 params_ref, gate_ref, *, progs):
+    z = pl.program_id(0)
+    d = dom_ref[z]
+    state = _view_state(parent_ref, high_ref, max_ref, low_ref, frozen_ref,
+                        priority_ref, prog_id_ref)
+    view = _chain_view(state, usage_ref[...], tu_ref[...], params_ref[...],
+                       d)
+    ok = (d >= 0) & gate_decision(progs, view, step_ref[0])
+    gate_ref[z] = ok.astype(jnp.int32)
+
+
+def fused_slot_gate(state: dict, slot_dom: jax.Array, step,
+                    prog=None) -> jax.Array:
+    """Fused replacement for the lax ``slot_gate`` body: one pass over
+    the resident table, one ``on_gate`` dispatch per slot."""
+    progs = as_programs(prog)
+    m = slot_dom.shape[0]
+    slot_dom = slot_dom.astype(jnp.int32)
+    step_arr = jnp.asarray(step, jnp.int32).reshape(1)
+    inputs = (slot_dom, step_arr, state["parent"], state["high"],
+              state["max"], state["low"],
+              state["frozen"].astype(jnp.int32), state["priority"],
+              state["prog_id"], state["usage"], state["throttle_until"],
+              state["prog"])
+    out_shape = [jax.ShapeDtypeStruct((m,), jnp.int32)]
+    (gate,) = pl.pallas_call(
+        functools.partial(_gate_kernel, progs=progs),
+        grid=(m,),
+        in_specs=_full_specs(inputs),
+        out_specs=_full_specs(out_shape),
+        out_shape=out_shape,
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("arbitrary",)),
+        interpret=not compat.on_tpu(),
+        name="fused_enforcement_gate",
+    )(*inputs)
+    return gate.astype(bool)

@@ -195,7 +195,9 @@ class Engine:
         self._lease: dict[str, object] = {}      # sid -> open tool Lease
         self._tool_seq = 0
         self._prev_throttle = np.zeros(self.cg.backend.n_domains, np.int64)
-        self._attached_prog: Optional[PolicyProgram] = None
+        # ordered attach history (scope -> program, same-scope replaces in
+        # place) so a backend rebuild replays the exact registry slots
+        self._attachments: list = []
         self._last_snapshot: Optional[dict] = None
 
     def _make_inner(self):
@@ -211,12 +213,23 @@ class Engine:
 
     # ---------------------------------------------------- policy programs
 
-    def attach_program(self, prog: PolicyProgram) -> None:
-        """Swap the in-step enforcement program (BPF object load): the
-        next step re-traces against the new decision code.  For pure
+    def attach_program(self, prog: PolicyProgram, path: str = "/") -> None:
+        """Swap or compose in-step enforcement programs (BPF object
+        load): the next step re-traces against the new decision code.
+        A root attach replaces the whole registry; a subtree attach at
+        ``path`` composes — that tenant's domains run ``prog`` while
+        everyone else keeps theirs (``AgentCgroup.attach``).  For pure
         parameter retunes use ``update_params`` — no retrace."""
-        self._attached_prog = prog
-        self.cg.attach("/", prog)
+        if path == "/":
+            self._attachments = [("/", prog)]
+        else:
+            for i, (p, _) in enumerate(self._attachments):
+                if p == path:
+                    self._attachments[i] = (path, prog)
+                    break
+            else:
+                self._attachments.append((path, prog))
+        self.cg.attach(path, prog)
         self._view = self.cg.device_view()
         self._step = _make_step_fn(self.cfg, self.perf, self.ecfg,
                                    self._view)
@@ -298,7 +311,8 @@ class Engine:
             snap = self.cg.snapshot()
             usage, high, maxl = snap["usage"], snap["high"], snap["max"]
             parent = snap["parent"]
-            prog = self.cg.program
+            progs = self.cg.programs
+            ids = snap.get("prog_id")
             decisions = {}
             for slot, sid in enumerate(self.slot_session):
                 if sid is None:
@@ -312,11 +326,14 @@ class Engine:
                 hard = any(usage[i] >= maxl[i] for i in chain)
                 if over > 0 or hard:
                     # the SAME delay curve the in-step program applies,
-                    # computed from the session's live param row — just
-                    # polled late, the §4.2 responsiveness gap
-                    dly_ms = float(prog.delay_ms(
+                    # computed from the session's live param row through
+                    # the session's OWN program (its prog_id slot) —
+                    # just polled late, the §4.2 responsiveness gap
+                    pid = int(ids[s.dom_idx]) if ids is not None else 0
+                    pr = progs[min(pid, len(progs) - 1)]
+                    dly_ms = float(pr.delay_ms(
                         snap["params"][s.dom_idx], max(float(over), 0.0)))
-                    dly = int(np.ceil(dly_ms / prog.step_ms)) or 1
+                    dly = int(np.ceil(dly_ms / pr.step_ms)) or 1
                     decisions[slot] = self.step_no + e.userspace_react_steps + dly
             self._pending_gate = (self.step_no + e.userspace_react_steps,
                                   decisions)
@@ -444,8 +461,8 @@ class Engine:
         except Exception:                # noqa: BLE001 — already poisoned
             pass
         inner = self._make_inner()
-        if self._attached_prog is not None:
-            inner.attach("/", self._attached_prog)
+        for path, prog in self._attachments:
+            inner.attach(path, prog)
         if self._last_snapshot is not None:
             inner.restore(self._last_snapshot)
         be = inner

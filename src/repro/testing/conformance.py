@@ -444,15 +444,45 @@ STANDARD_SCENARIOS: tuple = (
              ("charge", "/t/a/kid", 50, 61))),
     Scenario(
         "attach_scope",
-        description="domains outside the attach scope run the program's "
-                    "neutral row (the contract still applies)",
+        description="a subtree attach composes: only in-scope domains "
+                    "switch to the attached program; out-of-scope domains "
+                    "keep the program (and live row) they already had",
         programs={"bucket4": lambda: TokenBucketProgram(
             bucket_capacity=4, refill=(1.0, 1.0, 1.0))},
         capacity=10_000,
         ops=(("mkdir", "/scoped"), ("mkdir", "/free"),
              ("attach", "/scoped", "bucket4"),
              ("charge", "/scoped", 50, 0),    # deny: bucketed
-             ("charge", "/free", 50, 0))),    # grant: neutral row
+             ("charge", "/free", 50, 0))),    # grant: prior program kept
+    Scenario(
+        "multi_program",
+        description="two tenants run different policy programs "
+                    "concurrently in one hierarchy: a subtree attach "
+                    "gives /bkt the token bucket while /grad keeps the "
+                    "graduated root program; children created after the "
+                    "attach inherit the parent's program slot, and "
+                    "update_params resolves each path through its own "
+                    "program's parameter columns",
+        programs={"grad": GraduatedThrottleProgram,
+                  "bucket4": lambda: TokenBucketProgram(
+                      bucket_capacity=4, refill=(1.0, 1.0, 1.0))},
+        capacity=10_000,
+        ops=(("attach", "/", "grad"),
+             ("mkdir", "/grad"), ("mkdir", "/bkt"),
+             ("attach", "/bkt", "bucket4"),
+             ("mkdir", "/grad/s", {"high": 10}),
+             ("mkdir", "/bkt/s"),             # inherits the bucket slot
+             ("charge", "/bkt/s", 6, 0),      # deny: bucket holds 4
+             ("charge", "/bkt/s", 3, 0),      # grant: within the bucket
+             ("charge", "/grad/s", 20, 0),    # grant + graduated throttle
+             ("charge", "/grad/s", 1, 1),     # deny: inside the window
+             ("update_params", "/bkt", {"bucket_capacity": 50.0,
+                                        "bucket_level": 50.0}),
+             ("charge", "/bkt/s", 30, 5),     # grant: retuned bucket
+             ("update_params", "/grad", {"base_delay_ms": 0.0,
+                                         "max_delay_ms": 0.0}),
+             ("charge", "/grad/s", 1, 200),   # grant: throttle retuned off
+             ("usage", "/"), ("usage", "/grad"), ("usage", "/bkt"))),
     Scenario(
         "memcg_events",
         description="full memcg event counters (host-class backends)",
